@@ -1,0 +1,37 @@
+"""Fig. 8 analog: automatic hyperparameter configuration.
+
+HP:Ours (Alg. 4: surrogate-predicted logs over the search space) vs
+HP-baseline1 ("expert pick") and HP-baseline2 ("literature defaults"),
+validated by ACTUALLY training the small JAX LM with each setting and
+reporting measured final losses.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.autotune import (DataCard, ModelCard, default_search_space,
+                                 train_real_model, tune)
+
+HP_BASELINE1 = {"learning_rate": 1e-4, "batch_size": 64,
+                "weight_decay": 0.0}          # conservative expert pick
+HP_BASELINE2 = {"learning_rate": 3e-4, "batch_size": 32,
+                "weight_decay": 0.1}          # literature defaults
+
+
+def run(steps: int = 60) -> List[Dict]:
+    dc = DataCard("synthetic-lm", n_examples=50_000, seq_len=32)
+    mc = ModelCard("reduced-stablelm", n_params=600_000)
+    ours = tune(dc, mc, llm=None).best
+    rows = []
+    for name, hp in (("HP:Ours", ours), ("HP-baseline1", HP_BASELINE1),
+                     ("HP-baseline2", HP_BASELINE2)):
+        out = train_real_model(hp, steps=steps)
+        rows.append({"config": name, **{k: v for k, v in hp.items()},
+                     "final_loss": round(out["final_loss"], 4),
+                     "first_loss": round(out["losses"][0], 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

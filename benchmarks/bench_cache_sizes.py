@@ -1,0 +1,26 @@
+"""App. D.B analog: COULER policy effectiveness vs cache capacity
+(paper: 10G/20G/30G; scaled to this container's workload sizes)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.bench_caching import run_one
+from benchmarks.workloads import SCENARIOS
+
+
+from benchmarks.bench_caching import CAPACITY
+
+
+def run(scale: float = 1.0) -> List[Dict]:
+    rows = []
+    for scenario in SCENARIOS:
+        base = CAPACITY[scenario]
+        for frac in (0.5, 1.0, 2.5):
+            rows.append(run_one(scenario, "couler", int(base * frac),
+                                scale=scale))
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,127 @@
+"""Table II + Table III analog: pass@k for NL -> unified-code generation.
+
+A suite of NL descriptions each carries an executable GRADER over the built
+IR. pass@k is measured over seeded samples at t in {0.2, 0.6, 0.8} for the
+two simulated model tiers, with and without the paper's method (Code-Lake
+retrieval + decomposition + self-calibration). Numbers are real
+measurements of the surrogate error model (DESIGN.md §2.4) — the claim
+reproduced is the ORDERING (ours > raw, gpt-4 > gpt-3.5), not the absolute
+paper values.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.core.llm import TemplateLLM
+from repro.core.nl2wf import nl_to_workflow
+
+# (description, grader(ir) -> bool)
+SUITE: List = [
+    ("Load the dataset named demo, preprocess it, train the ResNet and ViT "
+     "models, evaluate accuracy, then select the best model.",
+     lambda ir: ({"load-data", "preprocess", "select-best"} <= set(ir.jobs)
+                 and sum(n.startswith("train-") for n in ir.jobs) >= 2
+                 and sum(n.startswith("eval-") for n in ir.jobs) >= 2)),
+
+    ("Load the click logs, preprocess them and train an xgboost model, then "
+     "evaluate auc.",
+     lambda ir: ({"load-data", "preprocess", "train"} <= set(ir.jobs)
+                 and any(n.startswith("eval") for n in ir.jobs))),
+
+    ("Fine-tune a GPT language model on the corpus after loading and "
+     "tokenizing the text, then checkpoint save the weights.",
+     lambda ir: ("finetune" in ir.jobs and "checkpoint" in ir.jobs
+                 and ("finetune", "checkpoint") in ir.edges
+                 or ("finetune" in ir.jobs and "checkpoint" in ir.jobs))),
+
+    ("Load images, augment the training data with transformations, train a "
+     "CNN model and evaluate accuracy.",
+     lambda ir: ({"load-data", "augment"} <= set(ir.jobs)
+                 and any(n.startswith("train") for n in ir.jobs))),
+
+    ("Load the table, split the data into train and validation sets, train "
+     "LSTM and transformer models and select the best by loss.",
+     lambda ir: ({"load-data", "split-data", "select-best"} <= set(ir.jobs)
+                 and sum(n.startswith("train-") for n in ir.jobs) >= 2)),
+
+    ("Load features, preprocess them, tune hyperparameters over 4 "
+     "configurations and train the best model.",
+     lambda ir: ("load-data" in ir.jobs
+                 and sum(n.startswith("hp-") for n in ir.jobs) >= 3)),
+
+    ("Load the data and run xgboost and lightgbm training jobs concurrently "
+     "in parallel, then select the best.",
+     lambda ir: ({"train-a", "train-b"} <= set(ir.jobs))),
+
+    ("Load sensor data, preprocess it, train a transformer model, evaluate "
+     "f1, deploy the model if it passes the quality gate.",
+     lambda ir: ("deploy" in ir.jobs
+                 and ir.jobs["deploy"].condition is not None)),
+
+    ("Load the corpus, preprocess and keep running the check step "
+     "repeatedly until the condition is met, then generate a report.",
+     lambda ir: ("check" in ir.jobs
+                 and ir.jobs["check"].loop_condition is not None
+                 and "report" in ir.jobs)),
+
+    ("Load the dataset named ads, preprocess it, train DenseNet, evaluate "
+     "accuracy and generate a summary report.",
+     lambda ir: ({"load-data", "preprocess", "report"} <= set(ir.jobs)
+                 and any(n.startswith("train") for n in ir.jobs))),
+]
+
+
+def _passes(desc: str, grader: Callable, llm: TemplateLLM, t: float,
+            seed: int, max_rounds: int) -> bool:
+    res = nl_to_workflow(desc, llm=llm, temperature=t, seed=seed,
+                         max_rounds=max_rounds)
+    if res.error is not None or res.workflow is None:
+        return False
+    try:
+        return bool(grader(res.workflow))
+    except Exception:
+        return False
+
+
+def pass_at_k(tier: str, use_references: bool, *, ks=(1, 3, 5),
+              temps=(0.2, 0.6, 0.8), n_seeds: int = 5) -> Dict:
+    """Best pass@k across temperatures (paper's evaluation procedure)."""
+    max_rounds = 4 if use_references else 1   # 'ours' adds self-calibration
+    best = {k: 0.0 for k in ks}
+    tokens = 0
+    for t in temps:
+        totals = {k: 0 for k in ks}
+        for desc, grader in SUITE:
+            llm = TemplateLLM(tier, use_references=use_references)
+            results = [_passes(desc, grader, llm, t, seed, max_rounds)
+                       for seed in range(n_seeds)]
+            tokens += llm.tokens_used
+            for k in ks:
+                # pass@k: any of the first k samples passes
+                totals[k] += any(results[:k])
+        for k in ks:
+            best[k] = max(best[k], totals[k] / len(SUITE))
+    return {"model": tier + ("+ours" if use_references else ""),
+            "pass@1": round(best[1] * 100, 2),
+            "pass@3": round(best[3] * 100, 2),
+            "pass@5": round(best[5] * 100, 2),
+            "tokens_per_workflow": tokens // (len(SUITE) * len(temps) * 5)}
+
+
+def run(n_seeds: int = 5) -> List[Dict]:
+    rows = []
+    for tier in ("gpt-3.5", "gpt-4"):
+        rows.append(pass_at_k(tier, use_references=False, n_seeds=n_seeds))
+        rows.append(pass_at_k(tier, use_references=True, n_seeds=n_seeds))
+    # Table III analog: cost per workflow
+    for tier in ("gpt-3.5", "gpt-4"):
+        llm = TemplateLLM(tier)
+        nl_to_workflow(SUITE[0][0], llm=llm, seed=0)
+        rows.append({"model": tier, "cost_tokens": llm.tokens_used,
+                     "cost_usd": round(llm.cost_usd(), 5)})
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,78 @@
+"""Consolidated roofline table from the dry-run JSONs (EXPERIMENTS.md feed)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+OUT = Path("out/dryrun")
+
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load(mesh_tag: str = "pod16x16", strategy: str = "baseline") -> List[Dict]:
+    rows = []
+    for f in sorted(OUT.glob(f"{mesh_tag}/*/*.json")):
+        stem_ok = (f.stem in SHAPES if strategy == "baseline"
+                   else f.stem.endswith(f".{strategy}"))
+        if not stem_ok:
+            continue
+        d = json.loads(f.read_text())
+        if d.get("status") == "skip":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "status": "skip", "reason": d["reason"]})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "status": d.get("status", "?")})
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "status": "ok",
+            "compile_s": d["compile_s"],
+            "mem_gib": round(d["memory_analysis"].get(
+                "total_per_device_bytes", 0) / 2**30, 2),
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "collective_s_bf16adj": round(r.get("collective_s_bf16adj",
+                                                r["collective_s"]), 4),
+            "dominant": r["dominant"],
+            "useful": round(r["useful_flops_ratio"], 3),
+            "roofline_frac": round(r["roofline_fraction"], 4),
+        })
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | dom | compute_s | memory_s | collective_s "
+           "(bf16adj) | mem/dev GiB | useful | roofline-frac |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | | |")
+        elif r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['dominant'][:4]} | "
+                f"{r['compute_s']} | {r['memory_s']} | {r['collective_s']} "
+                f"({r['collective_s_bf16adj']}) | "
+                f"{r['mem_gib']} | {r['useful']} | {r['roofline_frac']} |")
+    return "\n".join(out)
+
+
+def run() -> List[Dict]:
+    rows = load()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skip = [r for r in rows if r.get("status") == "skip"]
+    return [{"cells_ok": len(ok), "cells_skipped": len(skip),
+             "dominant_collective": sum(r["dominant"] == "collective" for r in ok),
+             "dominant_memory": sum(r["dominant"] == "memory" for r in ok),
+             "dominant_compute": sum(r["dominant"] == "compute" for r in ok)}]
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

@@ -1,0 +1,108 @@
+"""Shared benchmark workloads: the paper's three RQ2 scenarios as workflow
+DAGs whose steps are REAL (small) compute payloads with real artifact sizes,
+so cache decisions face genuine time/space trade-offs.
+
+  multimodal   37 pods / 19 "models"  (paper §VI.C)
+  image_seg    15 pods /  8 "models"
+  lm_finetune  21 pods / 11 "models"
+
+Step payloads are numpy matmul/reduction workloads sized so a scenario runs
+in seconds on CPU; `scale` shrinks them for tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import couler
+from repro.core.ir import WorkflowIR
+
+
+def _load(shape, seed):
+    def fn():
+        rng = np.random.default_rng(seed)
+        return rng.standard_normal(shape).astype(np.float32)
+    return fn
+
+
+def _transform(reps):
+    def fn(x, **kw):
+        y = x
+        for _ in range(reps):
+            y = np.tanh(y @ y.T[: y.shape[1], : y.shape[1]])
+        return y.astype(np.float32)
+    return fn
+
+
+def _train(reps):
+    def fn(x, **kw):
+        w = np.ones((x.shape[1], 64), np.float32) * 0.01
+        for _ in range(max(2, reps // 6)):
+            h = np.maximum(x @ w, 0)
+            w = w + 1e-3 * (x.T @ h)[:, :64] / x.shape[0]
+        return w
+    return fn
+
+
+def _eval(x=None, *rest, **kw):
+    return float(np.mean(np.abs(x))) if x is not None else 0.0
+
+
+SCENARIOS = {
+    # name: (n_branches, models_per_branch, dim)
+    "multimodal": (6, 3, 448),      # ~37 pods, 19 trains
+    "image_seg": (3, 2, 384),       # ~15 pods, 8 trains
+    "lm_finetune": (4, 2, 416),     # ~21 pods, 11 trains
+}
+
+
+def build_scenario(name: str, scale: float = 1.0, seed: int = 0) -> WorkflowIR:
+    """Branchy ML DAG: shared data load -> per-branch transform chains ->
+    several train steps per branch -> eval -> select.
+
+    Branches are HETEROGENEOUS (rebuild cost grows with branch id, and so
+    does the downstream fan-out): feat-5 costs ~6x feat-0 to rebuild and is
+    consumed by more trainers — exactly the (reconstruction cost x reuse
+    value) signal Eq. 6 scores and size-oblivious FIFO/LRU cannot see."""
+    branches, models, dim = SCENARIOS[name]
+    dim = max(32, int(dim * scale))
+    reps = max(1, int(8 * scale))
+
+    with couler.workflow(f"{name}-wf") as ir:
+        raw = couler.run_step(_load((dim, dim), seed), step_name="load-data",
+                              est_time_s=0.05, est_mem_bytes=dim * dim * 4)
+        prep = couler.run_step(_transform(reps * 3), raw,
+                               step_name="preprocess",
+                               est_time_s=0.3, est_mem_bytes=dim * dim * 4)
+        evals = []
+        for b in range(branches):
+            b_reps = reps * (1 + 2 * b)               # cost heterogeneity
+            b_models = 1 + (b * models) // max(branches - 1, 1)  # fan-out
+            feat = couler.run_step(_transform(b_reps), prep,
+                                   step_name=f"feat-{b}",
+                                   est_time_s=0.05 * (1 + 2 * b),
+                                   est_mem_bytes=dim * dim * 4)
+            for m in range(b_models):
+                t = couler.run_step(_train(reps), feat,
+                                    step_name=f"train-{b}-{m}",
+                                    est_time_s=0.05,
+                                    est_mem_bytes=dim * 64 * 4)
+                evals.append(couler.run_step(_eval, t,
+                                             step_name=f"eval-{b}-{m}",
+                                             est_time_s=0.01))
+        couler.run_step(lambda *xs: max(xs), *evals, step_name="select")
+    return ir
+
+
+def iterative_sessions(name: str, n_sessions: int = 3, scale: float = 1.0):
+    """The paper's iterative-development pattern: the same scenario is
+    resubmitted repeatedly with small edits (a changed trailing stage), so
+    early artifacts are repeatedly reusable. Returns list of WorkflowIRs."""
+    out = []
+    for s in range(n_sessions):
+        ir = build_scenario(name, scale=scale, seed=0)
+        # session s modifies one branch's training step (new kwargs)
+        victim = f"train-0-0"
+        if victim in ir.jobs and s > 0:
+            ir.jobs[victim].kwargs = {"session": s}
+        out.append(ir)
+    return out

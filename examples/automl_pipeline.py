@@ -1,0 +1,46 @@
+"""AutoML workflow (paper App. F + §IV.C): LLM hyperparameter tuning
+(Data Card + Model Card -> predicted logs -> pick), then REAL concurrent
+training of the chosen config vs a baseline, model selection via couler.
+
+    PYTHONPATH=src python examples/automl_pipeline.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import couler
+from repro.core.autotune import (DataCard, ModelCard, train_real_model, tune)
+from repro.core.engines.local import LocalEngine
+
+
+def main():
+    dc = DataCard("synthetic-lm", input_type="text", label_space="tokens",
+                  eval_metric="loss", n_examples=50_000, seq_len=32)
+    mc = ModelCard("tiny-lm", structure="decoder-transformer",
+                   n_params=600_000)
+    print("Algorithm 4: predicting training logs over the search space ...")
+    ours = tune(dc, mc).best
+    baseline = {"learning_rate": 1e-4, "batch_size": 64, "weight_decay": 0.0}
+    print("  HP:Ours      =", ours)
+    print("  HP-baseline1 =", baseline)
+
+    with couler.workflow("automl") as ir:
+        outs = couler.concurrent([
+            lambda: couler.run_step(train_real_model, ours, step_name="train-ours",
+                                    est_time_s=30),
+            lambda: couler.run_step(train_real_model, baseline,
+                                    step_name="train-baseline", est_time_s=30),
+        ])
+        best = couler.run_step(
+            lambda a, b: {"winner": "ours" if a["final_loss"] < b["final_loss"]
+                          else "baseline",
+                          "ours": a["final_loss"], "baseline": b["final_loss"]},
+            outs[0], outs[1], step_name="select")
+    run = LocalEngine(max_workers=2, enable_speculation=False).submit(ir)
+    print("workflow:", run.status)
+    print("result:", run.artifacts["select:out"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""SQLFlow frontend (paper §V.E): SQL statements -> COULER workflows.
+
+    PYTHONPATH=src python examples/sqlflow_demo.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.sqlflow import run_sql, to_workflow
+
+TRAIN = """
+SELECT * FROM iris.train
+TO TRAIN DNNClassifier
+WITH model.n_classes = 3, model.hidden_units = [10]
+COLUMN sepal_len, sepal_width, petal_length, petal_width
+LABEL class
+INTO sqlflow_models.my_dnn_model;
+"""
+
+PREDICT = """
+SELECT * FROM iris.test
+TO PREDICT iris.predict.class
+USING sqlflow_models.my_dnn_model;
+"""
+
+
+def main():
+    ir = to_workflow(TRAIN)
+    print("TRAIN statement lowers to DAG:", " -> ".join(ir.topo_order()))
+    r1 = run_sql(TRAIN)
+    model = r1.artifacts["save-model:out"]
+    print("trained + saved:", model["saved_as"],
+          "weights", model["weights"].shape)
+
+    r2 = run_sql(PREDICT, model_registry={model["saved_as"]: model})
+    preds = r2.artifacts["predict:out"]["preds"]
+    print(f"PREDICT -> {len(preds)} predictions, first 10: {preds[:10]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quick CPU sanity loop: forward + train step on all reduced archs."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch, reduced
+from repro.models import transformer as T
+from repro.training import train as TR
+
+ok = True
+only = sys.argv[1:] or ARCH_IDS
+for aid in only:
+    spec = get_arch(aid)
+    cfg = reduced(spec.model).replace(param_dtype="float32",
+                                      compute_dtype="float32")
+    tcfg = spec.train
+    key = jax.random.PRNGKey(0)
+    try:
+        B, S = 2, 32
+        batch = {"tokens": jnp.ones((B, S), jnp.int32),
+                 "targets": jnp.ones((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.ones((B, cfg.num_patches, cfg.d_model), jnp.float32)
+        state = TR.init_train_state(cfg, tcfg, key)
+        step = jax.jit(TR.make_train_step(cfg, tcfg))
+        state, m = step(state, batch)
+        loss = float(m["loss"])
+        assert loss == loss, "NaN loss"
+        # decode one token
+        caches = T.init_caches(cfg, B, 64, jnp.float32)
+        logits, caches = jax.jit(
+            lambda p, t, c: T.apply_lm_decode(p, cfg, t, c, jnp.int32(0))
+        )(state["params"], jnp.ones((B, 1), jnp.int32), caches)
+        assert logits.shape == (B, 1, cfg.padded_vocab), logits.shape
+        assert not bool(jnp.any(jnp.isnan(logits))), "NaN decode logits"
+        print(f"OK   {aid:20s} loss={loss:.4f}")
+    except Exception as e:
+        ok = False
+        print(f"FAIL {aid:20s} {type(e).__name__}: {e}")
+        traceback.print_exc()
+print("ALL OK" if ok else "FAILURES")
+sys.exit(0 if ok else 1)

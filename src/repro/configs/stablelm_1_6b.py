@@ -1,0 +1,20 @@
+"""stablelm-1.6b [dense]. [hf:stabilityai/stablelm-2-1_6b; unverified]"""
+from repro.configs.base import ArchSpec, ModelConfig, TrainConfig
+
+MODEL = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100_352,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)
+
+TRAIN = TrainConfig(optimizer="adamw", remat="full", accum_steps=1)
+
+_SKIP = "pure full-attention arch: long_500k needs sub-quadratic attention (task spec)"
+SPEC = ArchSpec(model=MODEL, train=TRAIN, skips={"long_500k": _SKIP})

@@ -1,0 +1,3 @@
+"""COULER core: unified workflow interface, IR, and the paper's optimizers."""
+from repro.core import api as couler
+from repro.core.ir import Condition, Job, Resources, WorkflowIR

@@ -1,0 +1,244 @@
+"""COULER unified programming interface (paper §II.B, Appendix A, Table V).
+
+The module-level functions mirror the paper's API:
+
+    run_script / run_container / run_job / run_step
+    when / equal / map_ / concurrent / exec_while / dag
+    create_parameter_artifact / set_dependencies / run(submitter)
+
+Workflows are built into the engine-agnostic IR; ``run(submitter=...)``
+hands the IR to any backend engine (local threaded executor, multi-cluster
+scheduler, Argo-YAML generator, Airflow generator). In this JAX adaptation a
+"container" payload is a Python/JAX callable; image/command are retained for
+the YAML backends.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.ir import Condition, Job, Resources, WorkflowIR
+
+_local = threading.local()
+
+
+class StepOutput:
+    """Handle to a step's output artifact; passing it to another step's args
+    creates a data edge (implicit workflow construction, paper code 2)."""
+
+    def __init__(self, job_name: str, artifact: str):
+        self.job_name = job_name
+        self.artifact = artifact
+
+    def __repr__(self):
+        return f"StepOutput({self.job_name}:{self.artifact})"
+
+
+def _wf() -> WorkflowIR:
+    wf = getattr(_local, "wf", None)
+    if wf is None:
+        wf = WorkflowIR("default")
+        _local.wf = wf
+    return wf
+
+
+class workflow:
+    """Context manager opening a fresh workflow under construction."""
+
+    def __init__(self, name: str = "workflow", **configs):
+        self.ir = WorkflowIR(name, configs)
+
+    def __enter__(self) -> WorkflowIR:
+        self._prev = getattr(_local, "wf", None)
+        _local.wf = self.ir
+        return self.ir
+
+    def __exit__(self, *exc):
+        _local.wf = self._prev
+        return False
+
+
+def current_workflow() -> WorkflowIR:
+    return _wf()
+
+
+def _unique(name: str) -> str:
+    wf = _wf()
+    if name not in wf.jobs:
+        return name
+    i = 2
+    while f"{name}-{i}" in wf.jobs:
+        i += 1
+    return f"{name}-{i}"
+
+
+def _add_step(name, fn, args, kwargs, *, kind, image="", command=None,
+              resources=None, step_name=None, cacheable=True,
+              est_time_s=1.0, est_mem_bytes=1 << 20, retry_limit=3) -> StepOutput:
+    wf = _wf()
+    name = step_name or name
+    if getattr(_local, "in_dag", False) and name in wf.jobs:
+        # explicit-DAG merge semantics (paper's diamond): re-invoking a step
+        # with the same name references the existing node
+        return StepOutput(name, wf.jobs[name].outputs[0])
+    name = _unique(name)
+    inputs, clean_args = [], []
+    for a in (args or ()):
+        if isinstance(a, StepOutput):
+            inputs.append(a.artifact)
+            clean_args.append(a)
+        else:
+            clean_args.append(a)
+    out_art = f"{name}:out"
+    job = Job(name=name, fn=fn, args=tuple(clean_args), kwargs=dict(kwargs or {}),
+              inputs=inputs, outputs=[out_art], kind=kind, image=image,
+              command=list(command or []),
+              resources=resources or Resources(), cacheable=cacheable,
+              est_time_s=est_time_s, est_mem_bytes=est_mem_bytes,
+              retry_limit=retry_limit)
+    wf.add_job(job)
+    for a in inputs:
+        src = a.split(":")[0]
+        if src in wf.jobs:
+            wf.add_edge(src, name)
+    return StepOutput(name, out_art)
+
+
+# ---------------------------------------------------------------------------
+# paper Table V API
+# ---------------------------------------------------------------------------
+
+def run_step(fn: Callable, *args, step_name: Optional[str] = None,
+             **kw) -> StepOutput:
+    """JAX-native step: fn(*args) runs in a worker (our 'pod')."""
+    opts = {k: kw.pop(k) for k in ("resources", "cacheable", "est_time_s",
+                                   "est_mem_bytes", "retry_limit")
+            if k in kw}
+    return _add_step(step_name or getattr(fn, "__name__", "step"), fn, args,
+                     kw, kind="job", step_name=step_name, **opts)
+
+
+def run_script(image: str = "", source: Optional[Callable] = None,
+               step_name: Optional[str] = None, **kw) -> StepOutput:
+    opts = {k: kw.pop(k) for k in ("resources", "cacheable", "est_time_s",
+                                   "est_mem_bytes", "retry_limit")
+            if k in kw}
+    return _add_step(step_name or getattr(source, "__name__", "script"),
+                     source, (), kw, kind="script", image=image,
+                     step_name=step_name, **opts)
+
+
+def run_container(image: str, command: Sequence[str] = (),
+                  args: Sequence[Any] = (), step_name: Optional[str] = None,
+                  fn: Optional[Callable] = None, output: Any = None,
+                  **kw) -> StepOutput:
+    opts = {k: kw.pop(k) for k in ("resources", "cacheable", "est_time_s",
+                                   "est_mem_bytes", "retry_limit")
+            if k in kw}
+    return _add_step(step_name or "container", fn, tuple(args), kw,
+                     kind="container", image=image, command=command,
+                     step_name=step_name, **opts)
+
+
+def run_job(fn: Callable, *args, num_workers: int = 1,
+            step_name: Optional[str] = None, **kw) -> StepOutput:
+    """Distributed job (maps to a multi-worker pod group)."""
+    res = kw.pop("resources", Resources(cpu=float(num_workers)))
+    return _add_step(step_name or getattr(fn, "__name__", "job"), fn, args,
+                     kw, kind="job", resources=res, step_name=step_name)
+
+
+def equal(a, b=None) -> Condition:
+    if isinstance(a, StepOutput):
+        return Condition("equal", a.artifact, b)
+    return Condition("equal", str(a), b)
+
+
+def not_equal(a, b=None) -> Condition:
+    c = equal(a, b)
+    return Condition("not_equal", c.artifact, c.value)
+
+
+def when(cond: Condition, then: Callable[[], StepOutput]) -> StepOutput:
+    """Conditional step (paper code 3): `then()` runs iff cond holds."""
+    out = then()
+    job = _wf().jobs[out.job_name]
+    job.condition = cond
+    src = cond.artifact.split(":")[0]
+    if src in _wf().jobs and src != out.job_name:
+        _wf().add_edge(src, out.job_name)
+    return out
+
+
+def exec_while(cond: Condition, body: Callable[[], StepOutput],
+               max_iterations: int = 16) -> StepOutput:
+    """Recursive step (paper code 5): re-run body while cond holds."""
+    out = body()
+    job = _wf().jobs[out.job_name]
+    job.loop_condition = cond
+    job.max_iterations = max_iterations
+    return out
+
+
+def map_(fn: Callable[[Any], StepOutput], items: Sequence[Any]) -> List[StepOutput]:
+    """Start one instance of fn per item (paper couler.map, code 6)."""
+    return [fn(x) for x in items]
+
+
+# keep the paper's exact name available too
+map = map_  # noqa: A001
+
+
+def concurrent(fns: Sequence[Callable[[], Any]]) -> List[Any]:
+    """Run several steps with no edges between them (paper code 7)."""
+    return [f() for f in fns]
+
+
+def dag(chains: Sequence[Sequence[Callable[[], StepOutput]]]) -> None:
+    """Explicit DAG definition (paper §II.B code 1): each chain is a list of
+    thunks; consecutive thunks get dependency edges. Thunks naming an
+    existing step (same step_name) are merged — the diamond example."""
+    wf = _wf()
+    _local.in_dag = True
+    try:
+        for chain in chains:
+            prev: Optional[str] = None
+            for thunk in chain:
+                before = set(wf.jobs)
+                out = thunk()
+                name = out.job_name if isinstance(out, StepOutput) else None
+                if name is None:
+                    new = set(wf.jobs) - before
+                    name = next(iter(new)) if new else None
+                if prev is not None and name is not None and prev != name:
+                    wf.add_edge(prev, name)
+                prev = name
+    finally:
+        _local.in_dag = False
+
+
+def set_dependencies(step: StepOutput, depends_on: Sequence[StepOutput]) -> None:
+    for d in depends_on:
+        _wf().add_edge(d.job_name, step.job_name)
+
+
+def create_parameter_artifact(path: str = "", is_global: bool = False):
+    class _Art:
+        def __init__(self, p):
+            self.path = p
+    return _Art(path)
+
+
+def run(submitter=None, workflow_ir: Optional[WorkflowIR] = None,
+        optimize: bool = True, **kw):
+    """Submit the current workflow to an engine (paper §II.F)."""
+    wf = workflow_ir or _wf()
+    wf.validate()
+    if submitter is None:
+        from repro.core.engines.local import LocalEngine
+        submitter = LocalEngine()
+    return submitter.submit(wf, optimize=optimize, **kw)
+
+
+def reset() -> None:
+    _local.wf = WorkflowIR("default")

@@ -1,0 +1,314 @@
+"""Automatic artifact caching (paper §IV.A, Eq. 3-6, Algorithm 2).
+
+The *caching importance factor* of artifact u:
+
+    I(u) = alpha * log(1 + L(u)) + beta * F(u)^2 - e^(-V(u))        (Eq. 6)
+
+  L(u)  reconstruction cost over the n-layer predecessor subgraph G_p,
+        truncated at already-cached artifacts:
+            L(u) = sum_ij A_ij * (w_i + d_i * d_j)                  (Eq. 3)
+  F(u)  reuse value over the successor subgraph G_s:
+            F(u) = sum_i r / kappa_ui * (zeta_ui + 1)               (Eq. 4)
+        with zeta = diag(d) - A (graph Laplacian)                   (Eq. 5)
+  V(u)  cache (memory) cost of u, normalized to the store capacity.
+
+Baselines implemented for the paper's RQ2 comparison: NONE, ALL, FIFO, LRU.
+
+Capacity-bounded ``CacheStore`` + the Algorithm-2 exchange loop live here;
+engines call ``store.offer(...)`` when a job finishes and ``store.get(...)``
+before running one. Eviction re-scores remaining items after every removal
+(paper: "recompute the caching importance factor of all remaining items").
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ir import WorkflowIR
+
+
+def sizeof(value: Any) -> int:
+    try:
+        import numpy as _np
+        if isinstance(value, _np.ndarray):
+            return int(value.nbytes)
+    except Exception:
+        pass
+    if hasattr(value, "nbytes"):
+        try:
+            return int(value.nbytes)
+        except Exception:
+            pass
+    if isinstance(value, (bytes, bytearray, str)):
+        return len(value)
+    if isinstance(value, (list, tuple)):
+        return 64 + sum(sizeof(v) for v in value)
+    if isinstance(value, dict):
+        return 64 + sum(sizeof(k) + sizeof(v) for k, v in value.items())
+    return 64
+
+
+@dataclass
+class CachedArtifact:
+    name: str
+    value: Any
+    bytes: int
+    compute_time_s: float
+    producer: str                      # job name
+    created: float = field(default_factory=time.time)
+    last_used: float = field(default_factory=time.time)
+    uses: int = 0
+    insertion: int = 0                 # FIFO order
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3-6
+# ---------------------------------------------------------------------------
+
+def predecessor_subgraph(wf: WorkflowIR, job: str, n_layers: int,
+                         cached_producers: set) -> List[str]:
+    """G_p: preceding n layers from u's producer; truncated at cached jobs
+    (paper §IV.A.2 properties (a),(b))."""
+    frontier = [job]
+    seen = {job}
+    for _ in range(n_layers):
+        nxt = []
+        for j in frontier:
+            for p in wf.predecessors(j):
+                if p in seen:
+                    continue
+                seen.add(p)
+                if p in cached_producers:
+                    continue            # truncate at cached artifact
+                nxt.append(p)
+        frontier = nxt
+        if not frontier:
+            break
+    return list(seen)
+
+
+def successor_subgraph(wf: WorkflowIR, job: str, n_layers: int) -> Dict[str, int]:
+    """G_s with hop distance kappa from u's producer."""
+    dist = {job: 0}
+    frontier = [job]
+    for k in range(1, n_layers + 1):
+        nxt = []
+        for j in frontier:
+            for s in wf.successors(j):
+                if s not in dist:
+                    dist[s] = k
+                    nxt.append(s)
+        frontier = nxt
+        if not frontier:
+            break
+    return dist
+
+
+def reconstruction_cost(wf: WorkflowIR, job: str, cached_producers: set,
+                        n_layers: int = 3) -> float:
+    """Eq. 3: L(u) = sum_ij A_ij (w_i + d_i d_j) over G_p."""
+    nodes = predecessor_subgraph(wf, job, n_layers, cached_producers)
+    A = wf.adjacency(nodes)
+    d = A.sum(0) + A.sum(1)
+    w = np.array([wf.jobs[n].est_time_s * max(1.0, wf.jobs[n].resources.cpu)
+                  for n in nodes])
+    # A_ij * (w_i + d_i*d_j), vectorized
+    cost = float((A * (w[:, None] + np.outer(d, d))).sum())
+    return cost
+
+
+def reuse_value(wf: WorkflowIR, job: str, n_layers: int = 3) -> float:
+    """Eq. 4/5: F(u) = sum_i r/kappa_ui * (zeta_ui + 1), zeta = diag(d) - A."""
+    dist = successor_subgraph(wf, job, n_layers)
+    nodes = list(dist)
+    if len(nodes) <= 1:
+        return 0.0
+    A = wf.adjacency(nodes)
+    d = A.sum(0) + A.sum(1)
+    zeta = np.diag(d) - A
+    # NOTE: taken literally, zeta_ui = -A_ui makes every DIRECT successor
+    # contribute (zeta+1) = 0, which contradicts Eq. 4's stated intent (F
+    # measures the value of reuse by successors). We keep the Laplacian
+    # structure but weight by |zeta_ui| so direct dependents count most.
+    u = nodes.index(job)
+    total = 0.0
+    for i, n in enumerate(nodes):
+        if n == job:
+            continue
+        kappa = dist[n]
+        r = 1.0                           # reuse event indicator
+        total += (r / max(kappa, 1)) * (abs(zeta[u, i]) + 1.0)
+    return float(total)
+
+
+def importance(l: float, f: float, v: float, alpha: float = 1.5,
+               beta: float = 1.0) -> float:
+    """Eq. 6 (alpha=1.5, beta=1 per paper §VI.C)."""
+    return alpha * math.log1p(max(l, 0.0)) + beta * f * f - math.exp(-v)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+class CachePolicy:
+    name = "base"
+
+    def admit(self, art: CachedArtifact) -> bool:
+        return True
+
+    def score(self, art: CachedArtifact, store: "CacheStore") -> float:
+        raise NotImplementedError
+
+
+class NoCache(CachePolicy):
+    name = "none"
+
+    def admit(self, art):
+        return False
+
+    def score(self, art, store):
+        return 0.0
+
+
+class CacheAll(CachePolicy):
+    """Admit everything; evict nothing until forced, then oldest-first."""
+    name = "all"
+
+    def score(self, art, store):
+        return -art.insertion        # forced eviction: oldest first
+
+
+class FIFOPolicy(CachePolicy):
+    name = "fifo"
+
+    def score(self, art, store):
+        return art.insertion          # lowest = first in = evicted first
+
+
+class LRUPolicy(CachePolicy):
+    name = "lru"
+
+    def score(self, art, store):
+        return art.last_used
+
+
+class CoulerPolicy(CachePolicy):
+    """Paper Algorithm 2: score = caching importance factor I(u)."""
+    name = "couler"
+
+    def __init__(self, alpha: float = 1.5, beta: float = 1.0,
+                 n_layers: int = 3):
+        self.alpha, self.beta, self.n_layers = alpha, beta, n_layers
+
+    def score(self, art: CachedArtifact, store: "CacheStore") -> float:
+        wf = store.workflow
+        if wf is None or art.producer not in wf.jobs:
+            return art.last_used
+        cached = {store.items[k].producer for k in store.items
+                  if k != art.name}
+        l = reconstruction_cost(wf, art.producer, cached, self.n_layers)
+        f = reuse_value(wf, art.producer, self.n_layers)
+        v = art.bytes / max(store.capacity_bytes, 1)
+        return importance(l, f, v, self.alpha, self.beta)
+
+
+POLICIES = {"none": NoCache, "all": CacheAll, "fifo": FIFOPolicy,
+            "lru": LRUPolicy, "couler": CoulerPolicy}
+
+
+# ---------------------------------------------------------------------------
+# store + Algorithm 2
+# ---------------------------------------------------------------------------
+
+class CacheStore:
+    """Capacity-bounded artifact store (models the Alluxio tier, §IV.A.1)."""
+
+    def __init__(self, capacity_bytes: int = 1 << 30,
+                 policy: Optional[CachePolicy] = None):
+        import threading
+        self.capacity_bytes = capacity_bytes
+        self.policy = policy or CoulerPolicy()
+        self.items: Dict[str, CachedArtifact] = {}
+        self.used_bytes = 0
+        self.workflow: Optional[WorkflowIR] = None
+        self._insertions = 0
+        self._lock = threading.RLock()      # engines offer() from workers
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
+                      "admitted": 0, "rejected": 0}
+
+    def attach_workflow(self, wf: WorkflowIR) -> None:
+        self.workflow = wf
+
+    def get(self, name: str) -> Optional[CachedArtifact]:
+        with self._lock:
+            art = self.items.get(name)
+            if art is None:
+                self.stats["misses"] += 1
+                return None
+            art.last_used = time.time()
+            art.uses += 1
+            self.stats["hits"] += 1
+            return art
+
+    def contains(self, name: str) -> bool:
+        return name in self.items
+
+    def offer(self, name: str, value: Any, compute_time_s: float,
+              producer: str, nbytes: Optional[int] = None) -> bool:
+        """Algorithm 2: try to admit a newly produced artifact, evicting
+        lower-importance items while capacity is exceeded."""
+        b = nbytes if nbytes is not None else sizeof(value)
+        with self._lock:
+            art = CachedArtifact(name=name, value=value, bytes=b,
+                                 compute_time_s=compute_time_s,
+                                 producer=producer, insertion=self._insertions)
+            self._insertions += 1
+
+            if not self.policy.admit(art):
+                self.stats["rejected"] += 1
+                return False
+            if b > self.capacity_bytes:
+                self.stats["rejected"] += 1
+                return False
+
+            # lines 10-11: fits -> cache it
+            if self.used_bytes + b <= self.capacity_bytes:
+                self._insert(art)
+                return True
+
+            # lines 16-31 (NodeSelection): compare vs lowest-scored items
+            new_score = self.policy.score(art, self)
+            while self.used_bytes + b > self.capacity_bytes:
+                if not self.items:
+                    break
+                scores = {k: self.policy.score(a, self)
+                          for k, a in self.items.items()}
+                k_min = min(scores, key=scores.get)
+                if scores[k_min] >= new_score:
+                    self.stats["rejected"] += 1
+                    return False               # new artifact loses
+                self._evict(k_min)
+                # paper: re-evaluate remaining items after every removal
+            self._insert(art)
+            return True
+
+    def _insert(self, art: CachedArtifact) -> None:
+        if art.name in self.items:
+            self._evict(art.name)
+        self.items[art.name] = art
+        self.used_bytes += art.bytes
+        self.stats["admitted"] += 1
+
+    def _evict(self, name: str) -> None:
+        art = self.items.pop(name)
+        self.used_bytes -= art.bytes
+        self.stats["evictions"] += 1
+
+    def hit_ratio(self) -> float:
+        tot = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / tot if tot else 0.0

@@ -1,0 +1,5 @@
+from repro.core.engines.base import Engine, StepStatus, WorkflowRun
+from repro.core.engines.local import LocalEngine
+from repro.core.engines.argo import ArgoSubmitter
+from repro.core.engines.airflow import AirflowSubmitter
+from repro.core.engines.cluster import Cluster, MultiClusterEngine

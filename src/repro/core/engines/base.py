@@ -1,0 +1,106 @@
+"""Engine interface + run bookkeeping (paper §II.F, App. B.B).
+
+Every backend consumes the same IR. ``WorkflowRun`` persists step statuses
+so a failed workflow can be restarted from the failure point, skipping
+steps whose status is Succeeded / Skipped / Cached (paper App. B.B).
+"""
+from __future__ import annotations
+
+import enum
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from repro.core.ir import WorkflowIR
+
+
+class StepStatus(str, enum.Enum):
+    PENDING = "Pending"
+    RUNNING = "Running"
+    SUCCEEDED = "Succeeded"
+    FAILED = "Failed"
+    SKIPPED = "Skipped"
+    CACHED = "Cached"
+
+
+@dataclass
+class StepRecord:
+    status: StepStatus = StepStatus.PENDING
+    attempts: int = 0
+    start: float = 0.0
+    end: float = 0.0
+    error: str = ""
+    speculative: bool = False
+
+    def duration(self) -> float:
+        return max(0.0, self.end - self.start)
+
+
+@dataclass
+class WorkflowRun:
+    workflow: WorkflowIR
+    steps: Dict[str, StepRecord] = field(default_factory=dict)
+    artifacts: Dict[str, Any] = field(default_factory=dict)
+    status: str = "Pending"
+    wall_time_s: float = 0.0
+    submitted: float = field(default_factory=time.time)
+
+    def succeeded(self) -> bool:
+        return self.status == "Succeeded"
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.steps.values():
+            out[r.status.value] = out.get(r.status.value, 0) + 1
+        return out
+
+    # -- metadata persistence ("we persist workflow metadata into a
+    #    database for automated management", App. B.B) -----------------
+    def persist(self, db_dir: str = "out/workflow_db") -> Path:
+        p = Path(db_dir)
+        p.mkdir(parents=True, exist_ok=True)
+        f = p / f"{self.workflow.name}-{int(self.submitted)}.json"
+        f.write_text(json.dumps({
+            "workflow": self.workflow.name,
+            "status": self.status,
+            "wall_time_s": self.wall_time_s,
+            "steps": {k: {"status": r.status.value, "attempts": r.attempts,
+                          "duration": r.duration(), "error": r.error}
+                      for k, r in self.steps.items()},
+        }, indent=1))
+        return f
+
+
+class Engine:
+    name = "engine"
+
+    def submit(self, wf: WorkflowIR, optimize: bool = True, **kw) -> WorkflowRun:
+        raise NotImplementedError
+
+    def resume(self, run: WorkflowRun, **kw) -> WorkflowRun:
+        """Restart from failure: re-submit, skipping Succeeded/Skipped/Cached."""
+        raise NotImplementedError
+
+
+# The >20 abnormal cloud patterns the controller auto-retries (App. B.B).
+TRANSIENT_ERROR_PATTERNS = [
+    "ExceededQuotaErr", "TooManyRequestsErr", "EtcdTimeout", "APIServerBusy",
+    "PodEvicted", "NodeNotReady", "ImagePullBackOff", "NetworkUnreachable",
+    "ConnectionReset", "DNSFailure", "VolumeMountTimeout", "OOMKilledTransient",
+    "LeaseLost", "WebhookTimeout", "SchedulerPreempted", "DiskPressure",
+    "RegistryThrottled", "CertRotation", "TokenExpired", "IPAMExhausted",
+    "ControllerRestart", "HeartbeatMissed",
+]
+
+
+class TransientError(RuntimeError):
+    """An error matching a known-retryable abnormal pattern."""
+
+
+def is_transient(err: BaseException) -> bool:
+    if isinstance(err, TransientError):
+        return True
+    msg = str(err)
+    return any(p in msg for p in TRANSIENT_ERROR_PATTERNS)

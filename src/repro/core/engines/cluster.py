@@ -1,0 +1,193 @@
+"""Multi-cluster workflow scheduling (paper App. B.A).
+
+Ant Group schedules workflows across heterogeneous clusters via a weighted
+queue over: (a) workflow priority, (b) cluster CPU/memory capacity,
+(c) user CPU/memory quota, (d) user GPU quota — keeping cluster loads
+balanced. This module implements that scheduler over an event-driven
+simulator (time advances to the next job completion; no sleeping), which is
+what the RQ1-style throughput benchmark drives with 22k workflows/day-scale
+loads.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.engines.base import Engine, StepRecord, StepStatus, WorkflowRun
+from repro.core.ir import WorkflowIR
+
+
+@dataclass
+class Cluster:
+    name: str
+    cpu: float
+    mem_bytes: float
+    gpu: float = 0.0
+    used_cpu: float = 0.0
+    used_mem: float = 0.0
+    used_gpu: float = 0.0
+
+    def fits(self, job) -> bool:
+        r = job.resources
+        return (self.used_cpu + r.cpu <= self.cpu
+                and self.used_mem + r.mem_bytes <= self.mem_bytes
+                and self.used_gpu + r.gpu <= self.gpu + 1e-9)
+
+    def load(self) -> float:
+        return max(self.used_cpu / max(self.cpu, 1e-9),
+                   self.used_mem / max(self.mem_bytes, 1e-9))
+
+
+@dataclass
+class UserQuota:
+    cpu: float = 64.0
+    mem_bytes: float = 64 * 2**30
+    gpu: float = 4.0
+    used_cpu: float = 0.0
+    used_mem: float = 0.0
+    used_gpu: float = 0.0
+
+    def fits(self, job) -> bool:
+        r = job.resources
+        return (self.used_cpu + r.cpu <= self.cpu
+                and self.used_mem + r.mem_bytes <= self.mem_bytes
+                and self.used_gpu + r.gpu <= self.gpu + 1e-9)
+
+
+@dataclass(order=True)
+class _QItem:
+    sort_key: Tuple
+    seq: int
+    wf: WorkflowIR = field(compare=False)
+    user: str = field(compare=False)
+    priority: int = field(compare=False)
+    submit_t: float = field(compare=False)
+
+
+class MultiClusterEngine(Engine):
+    """Event-driven simulation of the cross-cluster scheduling queue."""
+
+    name = "cluster"
+
+    def __init__(self, clusters: Optional[List[Cluster]] = None,
+                 quotas: Optional[Dict[str, UserQuota]] = None):
+        self.clusters = clusters or [
+            Cluster("gpu-cluster", cpu=512, mem_bytes=2048 * 2**30, gpu=64),
+            Cluster("cpu-cluster", cpu=2048, mem_bytes=8192 * 2**30),
+            Cluster("far-storage", cpu=1024, mem_bytes=4096 * 2**30),
+        ]
+        self.quotas = quotas or {}
+        self._seq = itertools.count()
+        self.metrics = {"scheduled_jobs": 0, "completed_workflows": 0,
+                        "failed_admission": 0, "makespan_s": 0.0,
+                        "cluster_busy_s": {c.name: 0.0 for c in self.clusters}}
+
+    def _quota(self, user: str) -> UserQuota:
+        if user not in self.quotas:
+            self.quotas[user] = UserQuota()
+        return self.quotas[user]
+
+    def _pick_cluster(self, job) -> Optional[Cluster]:
+        """Weighted choice: prefer fitting cluster with the lowest load;
+        GPU jobs must land on a GPU cluster."""
+        cands = [c for c in self.clusters if c.fits(job)]
+        if job.resources.gpu > 0:
+            cands = [c for c in cands if c.gpu > 0]
+        if not cands:
+            return None
+        return min(cands, key=lambda c: c.load())
+
+    def submit_many(self, workflows: List[Tuple[WorkflowIR, str, int]]
+                    ) -> Dict[str, WorkflowRun]:
+        """Simulate scheduling a batch of (workflow, user, priority).
+
+        Returns runs keyed by workflow name; self.metrics aggregates
+        utilization & makespan."""
+        queue: List[_QItem] = []
+        for wf, user, prio in workflows:
+            wf.validate()
+            heapq.heappush(queue, _QItem((-prio, next(self._seq)),
+                                         next(self._seq), wf, user, prio, 0.0))
+        runs: Dict[str, WorkflowRun] = {}
+        # active workflow state: remaining deps per job
+        active: List[Dict] = []
+        # (finish_time, seq, cluster, user, wf_state, job_name)
+        events: List[Tuple[float, int, Cluster, str, Dict, str]] = []
+        now = 0.0
+
+        def admit_from_queue():
+            admitted = True
+            while queue and admitted:
+                item = queue[0]
+                st = {"wf": item.wf, "user": item.user,
+                      "indeg": {n: len(item.wf.predecessors(n))
+                                for n in item.wf.jobs},
+                      "remaining": len(item.wf.jobs),
+                      "run": WorkflowRun(workflow=item.wf)}
+                for n in item.wf.jobs:
+                    st["run"].steps[n] = StepRecord()
+                heapq.heappop(queue)
+                active.append(st)
+                runs[item.wf.name] = st["run"]
+
+        def launch_ready():
+            for st in active:
+                wf = st["wf"]
+                for n, k in list(st["indeg"].items()):
+                    if k != 0 or st["run"].steps[n].status != StepStatus.PENDING:
+                        continue
+                    job = wf.jobs[n]
+                    q = self._quota(st["user"])
+                    if not q.fits(job):
+                        continue
+                    c = self._pick_cluster(job)
+                    if c is None:
+                        self.metrics["failed_admission"] += 1
+                        continue
+                    r = job.resources
+                    c.used_cpu += r.cpu
+                    c.used_mem += r.mem_bytes
+                    c.used_gpu += r.gpu
+                    q.used_cpu += r.cpu
+                    q.used_mem += r.mem_bytes
+                    q.used_gpu += r.gpu
+                    st["run"].steps[n].status = StepStatus.RUNNING
+                    st["run"].steps[n].start = now
+                    self.metrics["scheduled_jobs"] += 1
+                    heapq.heappush(events, (now + job.est_time_s,
+                                            next(self._seq), c, st["user"],
+                                            st, n))
+
+        admit_from_queue()
+        launch_ready()
+        while events:
+            now, _, c, user, st, n = heapq.heappop(events)
+            job = st["wf"].jobs[n]
+            r = job.resources
+            c.used_cpu -= r.cpu
+            c.used_mem -= r.mem_bytes
+            c.used_gpu -= r.gpu
+            q = self._quota(user)
+            q.used_cpu -= r.cpu
+            q.used_mem -= r.mem_bytes
+            q.used_gpu -= r.gpu
+            self.metrics["cluster_busy_s"][c.name] += job.est_time_s * r.cpu
+            rec = st["run"].steps[n]
+            rec.status = StepStatus.SUCCEEDED
+            rec.end = now
+            st["remaining"] -= 1
+            for s in st["wf"].successors(n):
+                st["indeg"][s] -= 1
+            if st["remaining"] == 0:
+                st["run"].status = "Succeeded"
+                st["run"].wall_time_s = now
+                self.metrics["completed_workflows"] += 1
+            launch_ready()
+        self.metrics["makespan_s"] = now
+        return runs
+
+    def submit(self, wf: WorkflowIR, optimize: bool = True, user: str = "u0",
+               priority: int = 0, **kw) -> WorkflowRun:
+        return self.submit_many([(wf, user, priority)])[wf.name]

@@ -1,0 +1,264 @@
+"""Local threaded DAG executor — the reference COULER engine.
+
+Implements the production behaviours of App. B:
+  * topological scheduling with a worker pool (max parallelism, Eq. 1 goal)
+  * automatic artifact caching (Algorithm 2) — steps whose outputs hit the
+    cache are marked ``Cached`` and skipped
+  * controller auto-retry with backoff on the known transient patterns
+  * straggler mitigation: a speculative duplicate races any step exceeding
+    ``straggler_factor x est_time_s`` when spare workers exist
+  * big-workflow auto-split (Algorithm 3) before scheduling
+  * restart-from-failure: ``resume(run)`` skips Succeeded/Skipped/Cached
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import hashlib
+import pickle
+import threading
+import time
+from typing import Any, Dict, List, Optional, Set
+
+from repro.core.api import StepOutput
+from repro.core.autosplit import Budget, split_workflow
+from repro.core.caching import CacheStore, CoulerPolicy
+from repro.core.engines.base import (Engine, StepRecord, StepStatus,
+                                     TransientError, WorkflowRun,
+                                     is_transient)
+from repro.core.ir import Job, WorkflowIR
+
+
+def _hash_value(v: Any) -> str:
+    try:
+        b = pickle.dumps(v)
+    except Exception:
+        b = repr(v).encode()
+    return hashlib.sha256(b).hexdigest()[:16]
+
+
+def cache_key(job: Job, artifact_values: Dict[str, Any]) -> str:
+    parts = [job.name, job.kind, job.image, ",".join(job.command)]
+    if job.fn is not None and hasattr(job.fn, "__code__"):
+        parts.append(hashlib.sha256(job.fn.__code__.co_code).hexdigest()[:12])
+    for a in (job.args or ()):
+        if isinstance(a, StepOutput):
+            parts.append(_hash_value(artifact_values.get(a.artifact)))
+        else:
+            parts.append(repr(a))
+    for k in sorted(job.kwargs or {}):
+        parts.append(f"{k}={job.kwargs[k]!r}")
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:24]
+
+
+class LocalEngine(Engine):
+    name = "local"
+
+    def __init__(self, max_workers: int = 8,
+                 cache: Optional[CacheStore] = None,
+                 budget: Optional[Budget] = None,
+                 straggler_factor: float = 4.0,
+                 retry_backoff_s: float = 0.02,
+                 enable_speculation: bool = True):
+        self.max_workers = max_workers
+        self.cache = cache if cache is not None else CacheStore(
+            capacity_bytes=1 << 30, policy=CoulerPolicy())
+        self.budget = budget or Budget()
+        self.straggler_factor = straggler_factor
+        self.retry_backoff_s = retry_backoff_s
+        self.enable_speculation = enable_speculation
+
+    # ------------------------------------------------------------------
+    def submit(self, wf: WorkflowIR, optimize: bool = True, **kw) -> WorkflowRun:
+        wf.validate()
+        run = WorkflowRun(workflow=wf)
+        for n in wf.jobs:
+            run.steps[n] = StepRecord()
+        if optimize:
+            parts = split_workflow(wf, self.budget)
+        else:
+            parts = [wf]
+        t0 = time.time()
+        ok = True
+        if len(parts) == 1:
+            ok = self._run_part(parts[0], run)
+        else:
+            # maximum parallelism (Eq. 1): independent parts of a wave run
+            # concurrently
+            from repro.core.autosplit import schedule_parts
+            waves = schedule_parts(wf, parts)
+            for wave in waves:
+                if not ok:
+                    break
+                if len(wave) == 1:
+                    ok = self._run_part(parts[wave[0]], run)
+                    continue
+                with cf.ThreadPoolExecutor(max_workers=len(wave)) as wp:
+                    futs = [wp.submit(self._run_part, parts[i], run)
+                            for i in wave]
+                    ok = all(f.result() for f in futs)
+        run.wall_time_s = time.time() - t0
+        run.status = "Succeeded" if ok else "Failed"
+        run.persist()
+        return run
+
+    def resume(self, run: WorkflowRun, **kw) -> WorkflowRun:
+        """Restart from failure (App. B.B): steps already Succeeded, Skipped
+        or Cached keep their artifacts; Failed/Pending steps re-run."""
+        wf = run.workflow
+        keep = {StepStatus.SUCCEEDED, StepStatus.SKIPPED, StepStatus.CACHED}
+        for n, rec in run.steps.items():
+            if rec.status not in keep:
+                run.steps[n] = StepRecord()
+        t0 = time.time()
+        ok = self._run_part(wf, run)
+        run.wall_time_s += time.time() - t0
+        run.status = "Succeeded" if ok else "Failed"
+        run.persist()
+        return run
+
+    # ------------------------------------------------------------------
+    def _run_part(self, wf: WorkflowIR, run: WorkflowRun) -> bool:
+        self.cache.attach_workflow(run.workflow)
+        done: Set[str] = {n for n, r in run.steps.items()
+                          if n in wf.jobs and r.status in
+                          (StepStatus.SUCCEEDED, StepStatus.SKIPPED,
+                           StepStatus.CACHED)}
+        failed = threading.Event()
+        lock = threading.Lock()
+
+        with cf.ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            inflight: Dict[cf.Future, str] = {}
+
+            def ready_jobs() -> List[str]:
+                out = []
+                for n in wf.jobs:
+                    if n in done or n in inflight.values():
+                        continue
+                    if run.steps[n].status == StepStatus.RUNNING:
+                        continue
+                    preds = [p for p in run.workflow.predecessors(n)
+                             if p in wf.jobs or p in run.steps]
+                    if all(p in done or run.steps.get(
+                            p, StepRecord()).status in
+                            (StepStatus.SUCCEEDED, StepStatus.SKIPPED,
+                             StepStatus.CACHED) for p in preds):
+                        out.append(n)
+                return out
+
+            while len(done) < len(wf.jobs) and not failed.is_set():
+                for n in ready_jobs():
+                    fut = pool.submit(self._exec_step, wf.jobs[n], run)
+                    inflight[fut] = n
+                if not inflight:
+                    break
+                done_futs, _ = cf.wait(list(inflight),
+                                       return_when=cf.FIRST_COMPLETED,
+                                       timeout=10.0)
+                for f in done_futs:
+                    n = inflight.pop(f)
+                    try:
+                        status = f.result()
+                    except Exception as e:  # noqa: BLE001
+                        status = StepStatus.FAILED
+                        run.steps[n].error = f"{type(e).__name__}: {e}"
+                        run.steps[n].status = status
+                    with lock:
+                        if status == StepStatus.FAILED:
+                            failed.set()
+                        else:
+                            done.add(n)
+        return not failed.is_set()
+
+    # ------------------------------------------------------------------
+    def _exec_step(self, job: Job, run: WorkflowRun) -> StepStatus:
+        rec = run.steps[job.name]
+        rec.start = time.time()
+        rec.status = StepStatus.RUNNING
+
+        # condition (couler.when)
+        if job.condition is not None and not job.condition.evaluate(run.artifacts):
+            rec.status = StepStatus.SKIPPED
+            rec.end = time.time()
+            return rec.status
+
+        # cache check (Algorithm 2 consumer side)
+        key = cache_key(job, run.artifacts)
+        if job.cacheable:
+            hit = self.cache.get(key)
+            if hit is not None:
+                for out in job.outputs:
+                    run.artifacts[out] = hit.value
+                rec.status = StepStatus.CACHED
+                rec.end = time.time()
+                return rec.status
+
+        iterations = 0
+        while True:                                   # exec_while loop
+            value, dur = self._invoke_with_retry(job, run, rec)
+            iterations += 1
+            if job.loop_condition is None:
+                break
+            for out in job.outputs:                   # loop cond reads output
+                run.artifacts[out] = value
+            if not job.loop_condition.evaluate(run.artifacts):
+                break
+            if iterations >= job.max_iterations:
+                break
+
+        for out in job.outputs:
+            run.artifacts[out] = value
+        # monitor feedback (App. B.B): measured duration refines the IR's
+        # time estimate, which feeds Eq. 3's w_i on the next cache decision
+        job.est_time_s = 0.5 * job.est_time_s + 0.5 * dur
+        if job.cacheable:
+            self.cache.offer(key, value, compute_time_s=dur,
+                             producer=job.name)
+        rec.status = StepStatus.SUCCEEDED
+        rec.end = time.time()
+        return rec.status
+
+    def _invoke_with_retry(self, job: Job, run: WorkflowRun, rec: StepRecord):
+        attempt = 0
+        while True:
+            attempt += 1
+            rec.attempts = attempt
+            t0 = time.time()
+            try:
+                value = self._invoke(job, run)
+                return value, time.time() - t0
+            except Exception as e:  # noqa: BLE001
+                if is_transient(e) and attempt <= job.retry_limit:
+                    time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+                    continue
+                rec.error = f"{type(e).__name__}: {e}"
+                rec.status = StepStatus.FAILED
+                rec.end = time.time()
+                raise
+
+    def _invoke(self, job: Job, run: WorkflowRun):
+        if job.fn is None:
+            return " ".join(job.command) or job.name   # container no-op
+        args = [run.artifacts.get(a.artifact) if isinstance(a, StepOutput)
+                else a for a in job.args]
+
+        if not self.enable_speculation:
+            return job.fn(*args, **job.kwargs)
+
+        # straggler mitigation: race a speculative copy if the primary
+        # exceeds straggler_factor x est_time_s. No context manager — we
+        # must NOT join the straggler thread once the backup won.
+        spec_pool = cf.ThreadPoolExecutor(max_workers=2)
+        try:
+            primary = spec_pool.submit(job.fn, *args, **job.kwargs)
+            budget_s = max(0.05, self.straggler_factor * job.est_time_s)
+            try:
+                return primary.result(timeout=budget_s)
+            except cf.TimeoutError:
+                backup = spec_pool.submit(job.fn, *args, **job.kwargs)
+                done, _ = cf.wait([primary, backup],
+                                  return_when=cf.FIRST_COMPLETED)
+                f = done.pop()
+                run.steps[job.name].speculative = True
+                return f.result()
+        finally:
+            spec_pool.shutdown(wait=False)

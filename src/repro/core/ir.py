@@ -1,0 +1,239 @@
+"""Workflow Intermediate Representation (paper §II.C).
+
+A workflow is ``G = <J, E, C>`` — jobs, edges, configurations — engine- and
+platform-agnostic. All optimizers (caching §IV.A, auto-parallel split §IV.B)
+and all backend generators (Argo YAML, Airflow DAG, local/cluster executors)
+operate on this IR, which is what makes the programming interface unified.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Resources:
+    cpu: float = 1.0
+    mem_bytes: int = 1 << 28
+    gpu: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class Condition:
+    """Runtime predicate on an upstream artifact: kind in {equal, not_equal,
+    greater, less, truthy}."""
+    kind: str
+    artifact: str
+    value: Any = None
+
+    def evaluate(self, artifacts: Dict[str, Any]) -> bool:
+        v = artifacts.get(self.artifact)
+        if self.kind == "equal":
+            return v == self.value
+        if self.kind == "not_equal":
+            return v != self.value
+        if self.kind == "greater":
+            return v > self.value
+        if self.kind == "less":
+            return v < self.value
+        return bool(v)
+
+
+@dataclass
+class Job:
+    name: str
+    fn: Optional[Callable] = None
+    args: Tuple = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    inputs: List[str] = field(default_factory=list)    # artifact names
+    outputs: List[str] = field(default_factory=list)
+    resources: Resources = field(default_factory=Resources)
+    retry_limit: int = 3
+    kind: str = "script"                               # script|container|job
+    image: str = ""
+    command: List[str] = field(default_factory=list)
+    condition: Optional[Condition] = None
+    est_time_s: float = 1.0
+    est_mem_bytes: int = 1 << 20
+    cacheable: bool = True
+    # loop metadata (exec_while)
+    loop_condition: Optional[Condition] = None
+    max_iterations: int = 16
+
+    def spec_size_bytes(self) -> int:
+        """Serialized-spec size of this job — the CRD-size budget component."""
+        d = {"name": self.name, "kind": self.kind, "image": self.image,
+             "command": self.command, "inputs": self.inputs,
+             "outputs": self.outputs, "resources": self.resources.as_dict()}
+        return len(json.dumps(d))
+
+
+class WorkflowIR:
+    """DAG of jobs with artifact-labelled edges."""
+
+    def __init__(self, name: str, configs: Optional[Dict] = None):
+        self.name = name
+        self.jobs: Dict[str, Job] = {}
+        self.edges: Set[Tuple[str, str]] = set()
+        self.configs: Dict[str, Any] = configs or {}
+
+    # -- construction ------------------------------------------------------
+    def add_job(self, job: Job) -> Job:
+        if job.name in self.jobs:
+            return self.jobs[job.name]          # idempotent (paper's dag())
+        self.jobs[job.name] = job
+        return job
+
+    def add_edge(self, src: str, dst: str) -> None:
+        if src not in self.jobs or dst not in self.jobs:
+            raise KeyError(f"edge references unknown job: {src}->{dst}")
+        if src == dst:
+            raise ValueError(f"self-edge on {src}")
+        self.edges.add((src, dst))
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def job_names(self) -> List[str]:
+        return list(self.jobs)
+
+    def predecessors(self, name: str) -> List[str]:
+        return [s for (s, d) in self.edges if d == name]
+
+    def successors(self, name: str) -> List[str]:
+        return [d for (s, d) in self.edges if s == name]
+
+    def adjacency(self, order: Optional[Sequence[str]] = None) -> np.ndarray:
+        order = list(order or self.jobs)
+        idx = {n: i for i, n in enumerate(order)}
+        A = np.zeros((len(order), len(order)), dtype=np.float64)
+        for s, d in self.edges:
+            if s in idx and d in idx:
+                A[idx[s], idx[d]] = 1.0
+        return A
+
+    def degrees(self, order: Optional[Sequence[str]] = None) -> np.ndarray:
+        A = self.adjacency(order)
+        return A.sum(0) + A.sum(1)
+
+    def topo_order(self) -> List[str]:
+        indeg = {n: 0 for n in self.jobs}
+        for _, d in self.edges:
+            indeg[d] += 1
+        ready = sorted(n for n, k in indeg.items() if k == 0)
+        out = []
+        while ready:
+            n = ready.pop(0)
+            out.append(n)
+            for d in sorted(self.successors(n)):
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    ready.append(d)
+        if len(out) != len(self.jobs):
+            raise ValueError(f"workflow {self.name} contains a cycle")
+        return out
+
+    def validate(self) -> None:
+        self.topo_order()
+        for s, d in self.edges:
+            assert s in self.jobs and d in self.jobs
+
+    def critical_path(self) -> Tuple[float, List[str]]:
+        """Longest chain by est_time_s (paper Eq. 1: T = max over paths)."""
+        finish: Dict[str, float] = {}
+        parent: Dict[str, Optional[str]] = {}
+        for n in self.topo_order():
+            preds = self.predecessors(n)
+            base, p = 0.0, None
+            for q in preds:
+                if finish[q] > base:
+                    base, p = finish[q], q
+            finish[n] = base + self.jobs[n].est_time_s
+            parent[n] = p
+        if not finish:
+            return 0.0, []
+        end = max(finish, key=finish.get)
+        path = [end]
+        while parent[path[-1]] is not None:
+            path.append(parent[path[-1]])
+        return finish[end], list(reversed(path))
+
+    def peak_parallel_mem(self) -> float:
+        """Paper Eq. 2 proxy: S = max over antichains of summed job memory.
+        Approximated by levels of the topological order."""
+        level: Dict[str, int] = {}
+        for n in self.topo_order():
+            preds = self.predecessors(n)
+            level[n] = 1 + max((level[p] for p in preds), default=-1)
+        by_level: Dict[int, float] = {}
+        for n, l in level.items():
+            by_level[l] = by_level.get(l, 0.0) + self.jobs[n].est_mem_bytes
+        return max(by_level.values(), default=0.0)
+
+    # -- budget (paper §IV.B): C = alpha(spec bytes) + beta(steps) + gamma(pods)
+    def budget(self) -> Dict[str, float]:
+        alpha = sum(j.spec_size_bytes() for j in self.jobs.values())
+        beta = len(self.jobs)
+        gamma = sum(max(1.0, j.resources.cpu) for j in self.jobs.values())
+        return {"spec_bytes": alpha, "steps": beta, "pods": gamma}
+
+    def subgraph(self, names: Sequence[str], name: str) -> "WorkflowIR":
+        sub = WorkflowIR(name, dict(self.configs))
+        keep = set(names)
+        for n in names:
+            sub.jobs[n] = self.jobs[n]
+        for s, d in self.edges:
+            if s in keep and d in keep:
+                sub.edges.add((s, d))
+        return sub
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> str:
+        def job_dict(j: Job):
+            d = {k: v for k, v in dataclasses.asdict(j).items()
+                 if k not in ("fn", "args", "kwargs", "condition",
+                              "loop_condition", "resources")}
+            d["resources"] = j.resources.as_dict()
+            if j.condition:
+                d["condition"] = dataclasses.asdict(j.condition)
+            if j.loop_condition:
+                d["loop_condition"] = dataclasses.asdict(j.loop_condition)
+            return d
+        return json.dumps({
+            "name": self.name,
+            "configs": {k: v for k, v in self.configs.items()
+                        if isinstance(v, (int, float, str, bool, list, dict))},
+            "jobs": [job_dict(j) for j in self.jobs.values()],
+            "edges": sorted(self.edges),
+        }, indent=1, default=str)
+
+    @classmethod
+    def from_json(cls, text: str) -> "WorkflowIR":
+        d = json.loads(text)
+        wf = cls(d["name"], d.get("configs", {}))
+        for jd in d["jobs"]:
+            cond = jd.pop("condition", None)
+            loop = jd.pop("loop_condition", None)
+            res = jd.pop("resources", None)
+            job = Job(**{k: v for k, v in jd.items()
+                         if k in {f.name for f in dataclasses.fields(Job)}})
+            if res:
+                job.resources = Resources(**res)
+            if cond:
+                job.condition = Condition(**cond)
+            if loop:
+                job.loop_condition = Condition(**loop)
+            wf.add_job(job)
+        for s, d_ in d["edges"]:
+            wf.add_edge(s, d_)
+        return wf
+
+    def fingerprint(self) -> str:
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]

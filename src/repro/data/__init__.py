@@ -1,0 +1,2 @@
+from repro.data.pipeline import (CachedShardReader, ShardedCorpus,
+                                 synthetic_batches)

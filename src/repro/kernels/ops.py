@@ -1,0 +1,36 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (validation mode per task spec) and
+False on TPU (Mosaic lowering). Model code calls these through
+``attn_impl="flash"`` / ``ssd_impl="pallas"`` config switches.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+def ssd_scan(x, dA, Bm, Cm, *, chunk: int = 128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd(x, dA, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256,
+            interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                    interpret=interpret)

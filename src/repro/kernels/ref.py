@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth).
+
+Note the SSD oracle is the *sequential recurrence* — mathematically
+independent from both the Pallas kernel and the chunked jnp formulation in
+``repro.models.ssm``, so it validates both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal: bool = True, scale=None):
+    """q,k,v: (BH, S, D) -> (BH, S, Dv). Naive full-softmax attention."""
+    S = q.shape[1]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def reference_ssd(x, dA, Bm, Cm):
+    """Sequential SSD recurrence.
+
+    x: (BH, S, P) inputs (already dt-scaled); dA: (BH, S) log-decays (<=0);
+    Bm, Cm: (BH, S, N). Returns (y (BH,S,P), final_state (BH,N,P)).
+
+        h_t = exp(dA_t) * h_{t-1} + B_t (x) x_t ;   y_t = C_t . h_t
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dat, bt, ct = inp
+        h = h * jnp.exp(dat)[:, None, None] + jnp.einsum(
+            "bn,bp->bnp", bt, xt)
+        y = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2),
+          dA.astype(jnp.float32).transpose(1, 0),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h
+
+
+def reference_rmsnorm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

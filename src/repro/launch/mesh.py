@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+
+Single pod : (data=16, model=16)            = 256 chips (v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def _mesh(shape, axes) -> Mesh:
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before jax init")
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh (used by tests with small fake-device counts)."""
+    return _mesh(tuple(shape), tuple(axes))
+
+
+# v5e hardware constants (per task spec)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link

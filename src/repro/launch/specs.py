@@ -1,0 +1,39 @@
+"""ShapeDtypeStruct input stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for a (arch x shape)
+cell; modality frontends are STUBS per the task spec — whisper gets
+precomputed frame embeddings, paligemma gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+        if shape.kind == "train":
+            batch["targets"] = sds((B, S), jnp.int32)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["patches"] = sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against caches of length S
+    return {"token": sds((B, 1), jnp.int32)}
+
+
+def cache_specs_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract cache pytree for decode cells (eval_shape: no allocation)."""
+    return jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len,
+                              jnp.bfloat16))

@@ -1,0 +1,109 @@
+"""Distributed training driver.
+
+On a real TPU slice this is the entry point per host:
+
+    python -m repro.launch.train --arch stablelm-1.6b --steps 1000 \
+        --strategy dp_zero1 --ckpt-dir gs://.../ckpt
+
+On this CPU container, pass ``--fake-devices N`` to run a REAL sharded
+training loop on N host devices (small mesh, reduced config) — the same
+code path: mesh -> sharding rules -> device_put -> jitted train_step ->
+async checkpoints -> restart-from-latest.
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--strategy", default="baseline",
+                    choices=["baseline", "dp_zero1", "pure_fsdp",
+                             "moe_a2a", "moe_rs"])
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--mesh", default="2x4",
+                    help="data x model (e.g. 2x4); 16x16 on a v5e pod")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="out/train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count="
+                                   f"{args.fake_devices}").strip()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch, reduced
+    from repro.data.pipeline import synthetic_batches
+    from repro.launch.mesh import make_mesh
+    from repro.sharding.ctx import use_mesh
+    from repro.sharding.rules import (batch_specs, opt_state_specs,
+                                      param_specs, rules_for, to_named)
+    from repro.training import train as TR
+    from repro.training.checkpoint import CheckpointManager
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = get_arch(args.arch)
+    cfg = spec.model
+    tcfg = spec.train
+    if args.reduced:
+        cfg = reduced(cfg).replace(param_dtype="float32",
+                                   compute_dtype="float32")
+        tcfg = tcfg.__class__(optimizer=tcfg.optimizer, learning_rate=1e-3,
+                              remat="none")
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh(dims, ("data", "model")[: len(dims)])
+    rules = rules_for(args.arch, args.strategy)
+    mgr = CheckpointManager(args.ckpt_dir)
+
+    with use_mesh(mesh, rules, args.strategy):
+        state = TR.init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        state_sh = {
+            "params": to_named(param_specs(state["params"], mesh, rules, cfg,
+                                           args.strategy), mesh),
+            "opt": to_named(opt_state_specs(state["opt"], mesh, rules, cfg,
+                                            args.strategy), mesh),
+            "step": NamedSharding(mesh, P()),
+        }
+        start = mgr.latest_step()
+        if start is not None:
+            print(f"resuming from checkpoint step {start}")
+            state = mgr.restore(like=jax.tree.map(
+                lambda x: __import__("numpy").asarray(x), state))
+        state = jax.device_put(state, state_sh)
+        step_fn = jax.jit(TR.make_train_step(cfg, tcfg),
+                          in_shardings=(state_sh, None),
+                          donate_argnums=(0,))
+
+        it = synthetic_batches(args.batch, args.seq, cfg.vocab_size,
+                               n=args.steps + 1)
+        for batch in it:
+            if int(state["step"]) >= args.steps:
+                break
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+            bsh = to_named(batch_specs(b, mesh, rules), mesh)
+            b = jax.device_put(b, bsh)
+            state, m = step_fn(state, b)
+            s = int(state["step"])
+            if s % args.log_every == 0:
+                print(f"step {s:5d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f}")
+            if s % args.ckpt_every == 0:
+                mgr.async_save(s, state)
+        mgr.wait()
+        mgr.save(int(state["step"]), state)
+        print(f"done at step {int(state['step'])}; "
+              f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.transformer import (apply_lm, apply_lm_decode, init_caches,
+                                      init_lm)

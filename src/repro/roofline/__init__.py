@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (analyze_hlo, roofline_report,
+                                     RooflineTerms)

@@ -1,0 +1,351 @@
+"""Roofline analysis from compiled SPMD HLO text.
+
+``jax`` ``compiled.cost_analysis()`` counts ``while`` (= ``lax.scan``) bodies
+ONCE — badly under-counting scanned-layer models (verified empirically; a
+3-step scan reported 1 step of FLOPs). So we parse the optimized HLO module
+ourselves, building the call graph (fusion/call/while/conditional) and
+multiplying while-body costs by the trip count recovered from the loop
+condition's comparison constant.
+
+Per-device quantities (the SPMD module is the per-device program):
+  flops            2 * prod(result dims) * prod(contract dims) per dot
+  hbm bytes        sum of operand+result bytes of dots + collective traffic
+                   (proxy; cost_analysis 'bytes accessed' is also reported)
+  collective wire bytes, ring-model per participant:
+     all-gather       result * (n-1)/n
+     reduce-scatter   result * (n-1)
+     all-reduce       result * 2(n-1)/n
+     all-to-all       result * (n-1)/n
+     collective-permute  result * 1
+
+Roofline terms (v5e, per task spec): compute = flops/197e12,
+memory = bytes/819e9, collective = wire_bytes/50e9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+), body=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of a result type string (handles tuples)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ITOA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_f32_bytes: float = 0.0     # portion of coll_bytes moving f32 data
+    dot_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # (callee, multiplier_kind): multiplier resolved later for while bodies
+    calls: List[Tuple[str, object]] = dataclasses.field(default_factory=list)
+    consts: List[int] = dataclasses.field(default_factory=list)
+    directions: List[str] = dataclasses.field(default_factory=list)
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, CompCost], Optional[str]]:
+    comps: Dict[str, CompCost] = {}
+    entry = None
+    cur: Optional[CompCost] = None
+    cur_name = None
+    shapes: Dict[str, str] = {}
+
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur_name = m.group(1)
+                cur = CompCost()
+                shapes = {}
+                if line.startswith("ENTRY"):
+                    entry = cur_name
+            continue
+        if line.startswith("}"):
+            comps[cur_name] = cur
+            cur = None
+            continue
+
+        for cm in _CONST_RE.finditer(line):
+            cur.consts.append(int(cm.group(1)))
+        dm = re.search(r"direction=(\w+)", line)
+        if dm:
+            cur.directions.append(dm.group(1))
+
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, rest = m.groups()
+        shapes[name] = rtype
+
+        if op == "dot":
+            # operands: first two %refs in rest
+            refs = re.findall(r"%([\w.\-]+)", rest)
+            lhs_t = shapes.get(refs[0], "") if refs else ""
+            cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            contract = 1
+            lhs_dims = _shape_dims(lhs_t)
+            if cdims and cdims.group(1):
+                for d in cdims.group(1).split(","):
+                    i = int(d)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+            out_elems = 1
+            for d in _shape_dims(rtype):
+                out_elems *= d
+            cur.flops += 2.0 * out_elems * contract
+            opd_bytes = sum(_shape_bytes(shapes.get(r, "")) for r in refs[:2])
+            cur.dot_bytes += _shape_bytes(rtype) + opd_bytes
+        elif op == "convolution":
+            out_elems = 1
+            for d in _shape_dims(rtype):
+                out_elems *= d
+            refs = re.findall(r"%([\w.\-]+)", rest)
+            k_elems = 1
+            if len(refs) > 1:
+                for d in _shape_dims(shapes.get(refs[1], "")):
+                    k_elems *= d
+            cur.flops += 2.0 * out_elems * k_elems
+        else:
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                n = _group_size(line)
+                b = _shape_bytes(rtype)
+                if op.endswith("-start") and base in ("all-gather", "all-reduce",
+                                                      "collective-permute"):
+                    b /= 2.0  # (operand, result) alias tuple
+                if base == "all-gather":
+                    wire = b * (n - 1) / max(n, 1)
+                elif base == "all-reduce":
+                    wire = b * 2 * (n - 1) / max(n, 1)
+                elif base == "reduce-scatter":
+                    wire = b * (n - 1)
+                elif base == "all-to-all":
+                    wire = b * (n - 1) / max(n, 1)
+                else:  # collective-permute
+                    wire = b
+                cur.coll_bytes += wire
+                cur.coll_by_kind[base] = cur.coll_by_kind.get(base, 0.0) + wire
+                if rtype.lstrip("(").startswith(("f32", "s32", "u32")):
+                    cur.coll_f32_bytes += wire
+
+        wm = _WHILE_RE.search(line)
+        if op == "while" and wm:
+            cur.calls.append((wm.group(2), ("while", wm.group(1))))
+            continue
+        cm = _CALLS_RE.search(line)
+        if cm:
+            cur.calls.append((cm.group(1), 1))
+        tm = _TOAPPLY_RE.search(line)
+        if tm:
+            cur.calls.append((tm.group(1), 1))
+        bm = _BRANCHES_RE.search(line)
+        if bm:
+            for b in re.findall(r"%([\w.\-]+)", bm.group(1)):
+                cur.calls.append((b, ("branch", None)))
+    return comps, entry
+
+
+def _gather(comps, name, field, seen=None):
+    seen = seen if seen is not None else set()
+    if name in seen or name not in comps:
+        return []
+    seen.add(name)
+    c = comps[name]
+    vals = list(getattr(c, field))
+    for callee, _ in c.calls:
+        vals.extend(_gather(comps, callee, field, seen))
+    return vals
+
+
+def _trip_count(comps: Dict[str, CompCost], cond_name: str) -> int:
+    """Trip count from the loop condition's comparison constant.
+
+    lax.scan lowers to ``iter < N`` (trip N) or a count-down ``iter >= 0``
+    starting at N-1 (trip N) — so for GE/GT conditions we add 1 to the max
+    constant seen in the condition computation.
+    """
+    consts = _gather(comps, cond_name, "consts")
+    if not consts:
+        return 1
+    trip = max(consts)
+    dirs = _gather(comps, cond_name, "directions")
+    if any(d in ("GE", "GT") for d in dirs):
+        trip += 1
+    return max(trip, 1)
+
+
+def _roll_up(comps: Dict[str, CompCost], name: str, cache: Dict[str, Tuple],
+             depth: int = 0):
+    if name in cache:
+        return cache[name]
+    if depth > 64 or name not in comps:
+        return (0.0, 0.0, 0.0, 0.0, {})
+    c = comps[name]
+    flops, coll, cf32, dotb = (c.flops, c.coll_bytes, c.coll_f32_bytes,
+                               c.dot_bytes)
+    by_kind = dict(c.coll_by_kind)
+    branch_best = None
+    for callee, mult in c.calls:
+        f, cl, c32, db, bk = _roll_up(comps, callee, cache, depth + 1)
+        if isinstance(mult, tuple) and mult[0] == "while":
+            k = _trip_count(comps, mult[1])
+            f, cl, c32, db = f * k, cl * k, c32 * k, db * k
+            bk = {kk: vv * k for kk, vv in bk.items()}
+        elif isinstance(mult, tuple) and mult[0] == "branch":
+            # conservative: take the most expensive branch
+            if branch_best is None or f > branch_best[0]:
+                branch_best = (f, cl, c32, db, bk)
+            continue
+        flops += f
+        coll += cl
+        cf32 += c32
+        dotb += db
+        for kk, vv in bk.items():
+            by_kind[kk] = by_kind.get(kk, 0.0) + vv
+    if branch_best:
+        flops += branch_best[0]
+        coll += branch_best[1]
+        cf32 += branch_best[2]
+        dotb += branch_best[3]
+        for kk, vv in branch_best[4].items():
+            by_kind[kk] = by_kind.get(kk, 0.0) + vv
+    cache[name] = (flops, coll, cf32, dotb, by_kind)
+    return cache[name]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops (dots+convs, scans unrolled)
+    coll_bytes: float            # per-device wire bytes
+    coll_f32_bytes: float        # f32 portion (CPU float-normalization artifact)
+    hbm_bytes: float             # per-device bytes proxy
+    coll_by_kind: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_s_bf16: float     # TPU-native estimate (f32 wires halved)
+    dominant: str
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_hlo(hlo_text: str, *, hbm_bytes_hint: Optional[float] = None
+                ) -> RooflineTerms:
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    flops, coll, cf32, dotb, by_kind = _roll_up(comps, entry, {})
+    hbm = hbm_bytes_hint if hbm_bytes_hint is not None else dotb
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    # XLA:CPU float-normalization rewrites bf16 dots to f32 and hoists the
+    # converts across collectives; XLA:TPU keeps bf16 wires. The adjusted
+    # estimate halves the f32 portion (documented in EXPERIMENTS.md §Roofline).
+    collective_s_bf16 = (coll - 0.5 * cf32) / ICI_BW
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda t: t[1])[0]
+    return RooflineTerms(flops=flops, coll_bytes=coll, coll_f32_bytes=cf32,
+                         hbm_bytes=hbm,
+                         coll_by_kind=by_kind, compute_s=compute_s,
+                         memory_s=memory_s, collective_s=collective_s,
+                         collective_s_bf16=collective_s_bf16, dominant=dom)
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """6*N*D for train, 2*N*D for serve forward (D = tokens in the step)."""
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_params_active * tokens
+    tokens = shape.global_batch            # decode: one token per sequence
+    return 2.0 * n_params_active * tokens
+
+
+def roofline_report(terms: RooflineTerms, cfg, shape, chips: int) -> Dict:
+    counts = cfg.param_counts()
+    mf = model_flops(cfg, shape, counts["active"])
+    mf_per_chip = mf / chips
+    return {
+        "arch": cfg.name, "shape": shape.name, "chips": chips,
+        "hlo_flops_per_chip": terms.flops,
+        "coll_bytes_per_chip": terms.coll_bytes,
+        "hbm_bytes_per_chip": terms.hbm_bytes,
+        "coll_by_kind": terms.coll_by_kind,
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "collective_s_bf16adj": terms.collective_s_bf16,
+        "dominant": terms.dominant,
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": (mf_per_chip / terms.flops) if terms.flops else 0.0,
+        "roofline_bound_s": max(terms.compute_s, terms.memory_s,
+                                terms.collective_s),
+        "model_compute_s": mf_per_chip / PEAK_FLOPS,
+        # fraction of ideal: ideal time = model flops at peak; achieved-bound
+        # time = dominant term
+        "roofline_fraction": (mf_per_chip / PEAK_FLOPS) /
+                             max(terms.compute_s, terms.memory_s,
+                                 terms.collective_s, 1e-30),
+    }

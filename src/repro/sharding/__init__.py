@@ -1,0 +1,4 @@
+from repro.sharding.ctx import (axis_ctx, logical_to_spec, mesh_axis_size,
+                                 shard, use_mesh)
+from repro.sharding.rules import (param_logical_axes, param_specs,
+                                  batch_specs, DEFAULT_RULES)

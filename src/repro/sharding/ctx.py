@@ -1,0 +1,115 @@
+"""Logical-axis sharding context (MaxText-style), with divisibility fallback.
+
+Models annotate activations with *logical* axis names, e.g.
+``shard(x, "batch", "seq", "embed")``. A ``use_mesh(mesh, rules)`` context
+resolves logical names to physical mesh axes; outside a mesh context the
+annotation is a no-op (so CPU smoke tests never see 512 fake devices).
+
+Resolution drops a physical axis when (a) it is absent from the mesh or
+(b) the dim size does not divide the axis size — this fallback is what lets
+all 40 (arch x shape) dry-run cells share one rule set.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+
+def _ctx():
+    if not hasattr(_state, "mesh"):
+        _state.mesh = None
+        _state.rules = {}
+        _state.strategy = "baseline"
+    return _state
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Dict[str, Logical],
+             strategy: str = "baseline"):
+    st = _ctx()
+    prev = (st.mesh, st.rules, getattr(st, "strategy", "baseline"))
+    st.mesh, st.rules, st.strategy = mesh, dict(rules), strategy
+    try:
+        with mesh:
+            yield
+    finally:
+        st.mesh, st.rules, st.strategy = prev
+
+
+def axis_ctx() -> Tuple[Optional[Mesh], Dict[str, Logical]]:
+    st = _ctx()
+    return st.mesh, st.rules
+
+
+def current_strategy() -> str:
+    return getattr(_ctx(), "strategy", "baseline")
+
+
+def mesh_axis_size(name: str) -> int:
+    mesh, _ = axis_ctx()
+    if mesh is None or name not in mesh.shape:
+        return 1
+    return mesh.shape[name]
+
+
+def _resolve_one(logical: Optional[str], dim: int, mesh: Mesh,
+                 rules: Dict[str, Logical], used: set):
+    """Logical name -> physical axis entry for PartitionSpec, or None."""
+    if logical is None:
+        return None
+    phys = rules.get(logical)
+    if phys is None:
+        return None
+    if isinstance(phys, str):
+        phys = (phys,)
+    # keep only axes present in mesh, unused so far, whose product divides dim
+    kept = []
+    prod = 1
+    for ax in phys:
+        if ax not in mesh.shape or ax in used:
+            continue
+        if dim % (prod * mesh.shape[ax]) != 0:
+            continue
+        kept.append(ax)
+        prod *= mesh.shape[ax]
+    if not kept:
+        return None
+    for ax in kept:
+        used.add(ax)
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]],
+                    shape: Sequence[int],
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[Dict[str, Logical]] = None) -> P:
+    if mesh is None or rules is None:
+        m, r = axis_ctx()
+        mesh = mesh or m
+        rules = rules if rules is not None else r
+    if mesh is None:
+        return P()
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set = set()
+    entries = [_resolve_one(lg, d, mesh, rules, used)
+               for lg, d in zip(logical_axes, shape)]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with a logical sharding constraint (no-op w/o mesh)."""
+    mesh, rules = axis_ctx()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,306 @@
+"""Path-based logical-axis assignment for parameter / cache / batch pytrees.
+
+Each leaf of a pytree gets a tuple of *logical* axis names from its path and
+rank; ``ctx.logical_to_spec`` then resolves those to a PartitionSpec under
+the active mesh with divisibility fallback. One rule set drives all 40
+(arch x shape) dry-run cells.
+
+Rule sets:
+  DEFAULT_RULES      TP/EP over ``model``, DP over ``pod``+``data``; params
+                     replicated over ``data`` (small/medium archs).
+  FSDP_RULES         additionally shards the d_model/lora dims of weights
+                     over ``data`` (ZeRO-3-style) — used for >=7B archs where
+                     replicated params + optimizer state exceed v5e HBM.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+from repro.sharding.ctx import logical_to_spec
+
+DEFAULT_RULES: Dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq_q": "model",          # blockwise-attention query rows
+    "kv_seq": "model",         # split-KV decode fallback
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "lora": None,
+    "embed": None,
+    "tp": "model",
+}
+
+FSDP_RULES = dict(DEFAULT_RULES, embed="data", lora="data")
+
+# ---- beyond-paper parallelism strategies (§Perf hillclimb) ----------------
+# pure data parallelism over every mesh axis; params replicated, optimizer
+# state ZeRO-1 sharded — optimal for small models where TP psums dominate
+DP_ZERO1_RULES: Dict[str, object] = {
+    "batch": ("pod", "data", "model"),
+    "zero1": ("data", "model"),
+    "seq_q": None, "kv_seq": ("data", "model"),
+    "heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+    "expert": None, "ssm_inner": None, "ssm_heads": None,
+    "lora": None, "embed": None, "tp": None,
+}
+
+# pure FSDP / ZeRO-3: batch over all axes, every weight's leading non-stack
+# dim sharded over all axes (bf16 all-gather per use instead of f32
+# activation all-reduces)
+PURE_FSDP_RULES: Dict[str, object] = dict(
+    DP_ZERO1_RULES, fsdp2=("data", "model"))
+
+# archs whose params + optimizer state exceed v5e HBM when only TP-sharded
+FSDP_ARCHS = {"deepseek-v3-671b", "mistral-nemo-12b", "granite-3-8b",
+              "starcoder2-7b"}
+
+
+def rules_for(arch_name: str, strategy: str = "baseline") -> Dict[str, object]:
+    if strategy == "dp_zero1":
+        return DP_ZERO1_RULES
+    if strategy == "pure_fsdp":
+        return PURE_FSDP_RULES
+    if strategy in ("baseline", "moe_a2a", "moe_a2a_seqshard", "moe_rs"):
+        return FSDP_RULES if arch_name in FSDP_ARCHS else DEFAULT_RULES
+    raise ValueError(strategy)
+
+
+# ---------------------------------------------------------------------------
+# parameter logical axes
+# ---------------------------------------------------------------------------
+
+_PARAM_TABLE: Dict[str, Tuple[Optional[str], ...]] = {
+    "table": ("vocab", "embed"),
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+    "wq_a": ("embed", "lora"),
+    "wq_b": ("lora", "heads"),
+    "wkv_a": ("embed", "lora"),
+    "wkv_b": ("lora", "heads"),
+    "router": ("embed", "expert"),
+    "in_z": ("embed", "ssm_inner"),
+    "in_x": ("embed", "ssm_inner"),
+    "in_B": ("embed", None),
+    "in_C": ("embed", None),
+    "in_dt": ("embed", "ssm_heads"),
+    "dt_bias": ("ssm_heads",),
+    "A_log": ("ssm_heads",),
+    "D_skip": ("ssm_heads",),
+    "conv_x": (None, "ssm_inner"),
+    "conv_B": (None, None),
+    "conv_C": (None, None),
+    "out": ("ssm_inner", "embed"),
+    "proj": ("embed", "tp"),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+    return tuple(names)
+
+
+def param_logical_axes(path, shape) -> Tuple[Optional[str], ...]:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+
+    if name == "w" and parent == "lm_head":
+        base: Tuple[Optional[str], ...] = ("embed", "vocab")
+    elif name in ("scale", "bias"):
+        base = ("ssm_inner",) if parent == "gate_norm" else (None,)
+    elif name in ("gate", "up") and parent == "experts":
+        base = ("expert", "embed", "mlp")
+    elif name == "down" and parent == "experts":
+        base = ("expert", "mlp", "embed")
+    elif name in ("gate", "up"):
+        base = ("embed", "mlp")
+    elif name == "down":
+        base = ("mlp", "embed")
+    elif name in _PARAM_TABLE:
+        base = _PARAM_TABLE[name]
+    else:
+        base = (None,) * len(shape)
+
+    if len(base) > len(shape):          # e.g. 1D leaf matched 2D base
+        base = base[-len(shape):]
+    pad = len(shape) - len(base)        # leading layer/group stack dims
+    return (None,) * pad + tuple(base)
+
+
+# ---------------------------------------------------------------------------
+# cache logical axes (decode-state pytrees)
+# ---------------------------------------------------------------------------
+
+_CACHE_TABLE: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("batch", "kv_heads", "kv_seq", None),
+    "v": ("batch", "kv_heads", "kv_seq", None),
+    "c_kv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "state": ("batch", "ssm_heads", None, None),
+    "conv_x": ("batch", None, "ssm_inner"),
+    "conv_B": ("batch", None, None),
+    "conv_C": ("batch", None, None),
+}
+
+
+def cache_logical_axes(path, shape) -> Tuple[Optional[str], ...]:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    base = _CACHE_TABLE.get(name, (None,) * len(shape))
+    if len(base) > len(shape):
+        base = base[-len(shape):]
+    pad = len(shape) - len(base)
+    return (None,) * pad + tuple(base)
+
+
+# ---------------------------------------------------------------------------
+# batch logical axes
+# ---------------------------------------------------------------------------
+
+_BATCH_TABLE: Dict[str, Tuple[Optional[str], ...]] = {
+    "tokens": ("batch", None),
+    "targets": ("batch", None),
+    "token": ("batch", None),
+    "patches": ("batch", None, None),
+    "frames": ("batch", None, None),
+    "index": (),
+}
+
+
+def batch_logical_axes(path, shape) -> Tuple[Optional[str], ...]:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    base = _BATCH_TABLE.get(name, (None,) * len(shape))
+    return tuple(base)[: len(shape)] + (None,) * max(0, len(shape) - len(base))
+
+
+# ---------------------------------------------------------------------------
+# tree -> spec tree
+# ---------------------------------------------------------------------------
+
+def _specs(tree, axes_fn, mesh, rules):
+    leaves, treedef = tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        shape = getattr(leaf, "shape", ())
+        axes = axes_fn(path, shape)
+        out.append(logical_to_spec(axes, shape, mesh, rules))
+    return tree_unflatten(treedef, out)
+
+
+def _head_aware(axes_fn, cfg, mesh):
+    """Attention-weight fallback when head counts don't divide TP.
+
+    Sharding the fused (H*hd) dim when H % TP != 0 makes the later
+    (B,S,H,hd) reshape cut across shard boundaries — XLA inserts per-layer
+    all-gathers of full activations. Instead we shard those weights on the
+    CONTRACTING dim ("tp" = row-parallel), which keeps FLOPs sharded at the
+    cost of one psum per projection (measured in §Perf).
+    """
+    if cfg is None or mesh is None or "model" not in mesh.shape:
+        return axes_fn
+    tp = mesh.shape["model"]
+    q_bad = cfg.num_heads and cfg.num_heads % tp != 0
+    kv_bad = cfg.num_kv_heads and cfg.num_kv_heads % tp != 0
+
+    def fn(path, shape):
+        axes = axes_fn(path, shape)
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name in ("wq", "wo") and q_bad and cfg.attention != "mla":
+            base = ("tp", None) if name == "wq" else ("tp", None)
+            pad = len(shape) - len(base)
+            return (None,) * pad + base
+        if name in ("wk", "wv") and kv_bad:
+            pad = len(shape) - 2
+            return (None,) * pad + ("tp", None)
+        return axes
+    return fn
+
+
+def _largest_dim_axes(name_for_dim: str):
+    """Strategy wrapper: shard each leaf's LARGEST dim (most likely to be
+    256-divisible and memory-dominant) over the strategy axes."""
+    def fn(path, shape):
+        if len(shape) == 0:
+            return ()
+        i = max(range(len(shape)), key=lambda j: shape[j])
+        return tuple(name_for_dim if j == i else None
+                     for j in range(len(shape)))
+    return fn
+
+
+def param_specs(tree, mesh=None, rules=None, cfg=None,
+                strategy: str = "baseline"):
+    if strategy == "pure_fsdp":
+        return _specs(tree, _largest_dim_axes("fsdp2"), mesh, rules)
+    if strategy == "dp_zero1":
+        return _specs(tree, lambda p, s: (None,) * len(s), mesh, rules)
+    return _specs(tree, _head_aware(param_logical_axes, cfg, mesh), mesh, rules)
+
+
+def cache_specs(tree, mesh=None, rules=None):
+    return _specs(tree, cache_logical_axes, mesh, rules)
+
+
+def batch_specs(tree, mesh=None, rules=None):
+    return _specs(tree, batch_logical_axes, mesh, rules)
+
+
+def opt_state_specs(opt_shapes, mesh=None, rules=None, cfg=None,
+                    strategy: str = "baseline"):
+    """Optimizer-state tree: moments reuse the param axes of their subpath;
+    Adafactor factored rows/cols drop the reduced dim's axis. Under
+    dp_zero1, moments shard their largest dim over the 'zero1' axes (the
+    partitioner then emits the ZeRO-1 grad reduce-scatter + param
+    all-gather pattern)."""
+    if strategy == "pure_fsdp":
+        base_axes = _largest_dim_axes("fsdp2")
+    elif strategy == "dp_zero1":
+        base_axes = _largest_dim_axes("zero1")
+    else:
+        base_axes = _head_aware(param_logical_axes, cfg, mesh)
+
+    def axes_fn(path, shape):
+        names = _path_names(path)
+        # find the optimizer-slot marker and strip everything up to it
+        for i, n in enumerate(names):
+            if n in ("mu", "nu", "v", "vr", "vc", "err"):
+                slot = n
+                sub = names[i + 1:]
+                break
+        else:
+            return (None,) * len(shape)
+        # reconstruct a pseudo-path of the param leaf
+        class _K:  # minimal DictKey stand-in
+            def __init__(self, k):
+                self.key = k
+        ppath = tuple(_K(n) for n in sub)
+        if slot in ("mu", "nu", "v", "err"):
+            return base_axes(ppath, shape)
+        # factored: vr drops last dim, vc drops second-to-last
+        if slot == "vr":
+            return base_axes(ppath, tuple(shape) + (1,))[:-1]
+        full = base_axes(ppath, tuple(shape[:-1]) + (1, shape[-1]))
+        return full[:-2] + (full[-1],)
+    return _specs(opt_shapes, axes_fn, mesh, rules)
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

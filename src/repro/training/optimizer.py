@@ -1,0 +1,137 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+Hand-rolled (no optax in this container). Adafactor is the assigned
+optimizer for deepseek-v3-671b: full Adam fp32 moments for 671B params are
+~5.4 TB — 21 GB/chip at 256 chips — exceeding v5e HBM, while Adafactor's
+factored statistics are ~O(rows+cols) (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # scale in the gradient's own dtype: avoids materializing a full fp32
+    # copy of the gradient tree (10+ GB/device for the 671B config)
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, beta1=0.9, beta2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** c
+    bc2 = 1.0 - beta2 ** c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * jnp.square(g)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (no momentum, factored v; Shazeer & Stern 2018, simplified)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def vr(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                else jnp.zeros((1,), jnp.float32))
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+    def v(p):
+        return (jnp.zeros((1,), jnp.float32) if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32))
+    return {"vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "v": jax.tree.map(v, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0, beta2_cap=0.999):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta2 = jnp.minimum(beta2_cap, 1.0 - c ** -0.8)
+
+    def upd(g, vr, vc, v, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            u = g * jax.lax.rsqrt(vhat + eps)
+        else:
+            v = beta2 * v + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v + eps)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return new_p, vr, vc, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    zipped = zip(flat_g, jax.tree.leaves(state["vr"]),
+                 jax.tree.leaves(state["vc"]), jax.tree.leaves(state["v"]),
+                 jax.tree.leaves(params))
+    out = [upd(*t) for t in zipped]
+    return (tdef.unflatten([o[0] for o in out]),
+            {"vr": tdef.unflatten([o[1] for o in out]),
+             "vc": tdef.unflatten([o[2] for o in out]),
+             "v": tdef.unflatten([o[3] for o in out]),
+             "count": count})
+
+
+def opt_init(name: str):
+    return {"adamw": adamw_init, "adafactor": adafactor_init}[name]
+
+
+def opt_update(name: str):
+    return {"adamw": adamw_update, "adafactor": adafactor_update}[name]

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# must see 1 device (task spec). Multi-device tests run via subprocess
+# (tests/test_distributed.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

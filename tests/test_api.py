@@ -1,0 +1,107 @@
+from repro.core import couler
+from repro.core.engines.local import LocalEngine
+
+
+def test_diamond_explicit_dag():
+    with couler.workflow("diamond") as ir:
+        def job(name):
+            return couler.run_container(image="whalesay:latest",
+                                        command=["cowsay"], args=[name],
+                                        step_name=name,
+                                        fn=lambda n=name: n.lower())
+        couler.dag([
+            [lambda: job("A")],
+            [lambda: job("A"), lambda: job("B")],
+            [lambda: job("A"), lambda: job("C")],
+            [lambda: job("B"), lambda: job("D")],
+            [lambda: job("C"), lambda: job("D")],
+        ])
+    assert set(ir.jobs) == {"A", "B", "C", "D"}
+    assert ir.edges == {("A", "B"), ("A", "C"), ("B", "D"), ("C", "D")}
+    run = LocalEngine().submit(ir)
+    assert run.succeeded()
+
+
+def test_implicit_dataflow_edges():
+    with couler.workflow("flow") as ir:
+        a = couler.run_step(lambda: 41, step_name="a")
+        b = couler.run_step(lambda x: x + 1, a, step_name="b")
+    assert ("a", "b") in ir.edges
+    run = LocalEngine().submit(ir)
+    assert run.artifacts["b:out"] == 42
+
+
+def test_when_condition_skips():
+    with couler.workflow("cond") as ir:
+        r = couler.run_step(lambda: "tails", step_name="flip")
+        couler.when(couler.equal(r, "heads"),
+                    lambda: couler.run_step(lambda: "H", step_name="heads"))
+        couler.when(couler.equal(r, "tails"),
+                    lambda: couler.run_step(lambda: "T", step_name="tails"))
+    run = LocalEngine().submit(ir)
+    assert run.succeeded()
+    assert run.steps["heads"].status.value == "Skipped"
+    assert run.artifacts["tails:out"] == "T"
+
+
+def test_exec_while_loops_until_condition():
+    calls = {"n": 0}
+
+    def flip():
+        calls["n"] += 1
+        return "heads" if calls["n"] >= 4 else "tails"
+
+    with couler.workflow("loop") as ir:
+        r = couler.run_step(flip, step_name="flip")
+        couler.exec_while(couler.equal(r, "tails"), lambda: r)
+    run = LocalEngine().submit(ir)
+    assert run.artifacts["flip:out"] == "heads"
+    assert calls["n"] == 4
+
+
+def test_map_and_concurrent():
+    with couler.workflow("mapc") as ir:
+        outs = couler.map_(lambda x: couler.run_step(
+            lambda v=x: v * 2, step_name=f"m{x}"), [1, 2, 3])
+        couler.concurrent([
+            lambda: couler.run_step(lambda: "p", step_name="p1"),
+            lambda: couler.run_step(lambda: "q", step_name="p2"),
+        ])
+    assert len(ir.jobs) == 5
+    run = LocalEngine().submit(ir)
+    assert [run.artifacts[o.artifact] for o in outs] == [2, 4, 6]
+
+
+def test_set_dependencies():
+    with couler.workflow("deps") as ir:
+        a = couler.run_step(lambda: 1, step_name="a")
+        b = couler.run_step(lambda: 2, step_name="b")
+        couler.set_dependencies(b, depends_on=[a])
+    assert ("a", "b") in ir.edges
+
+
+def test_paper_appendix_a_producer_consumer():
+    """Paper Code 2: artifact passing between producer and consumer pods."""
+    def producer(step_name):
+        out = couler.create_parameter_artifact(path="/opt/hello_world.txt",
+                                               is_global=True)
+        return couler.run_container(
+            image="docker/whalesay:latest",
+            args=[f"echo -n hello world > {out.path}"],
+            command=["bash", "-c"],
+            step_name=step_name,
+            fn=lambda *_: "hello world")
+
+    def consumer(step_name, inp):
+        return couler.run_container(
+            image="docker/whalesay:latest", command=["cowsay"],
+            args=[inp], step_name=step_name,
+            fn=lambda x: f"said: {x}")
+
+    with couler.workflow("prod-cons") as ir:
+        out = producer("step1")
+        consumer("step2", out)
+    assert ("step1", "step2") in ir.edges
+    run = LocalEngine().submit(ir)
+    assert run.succeeded()
+    assert run.artifacts["step2:out"] == "said: hello world"

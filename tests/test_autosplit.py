@@ -1,0 +1,64 @@
+import pytest
+
+from repro.core.autosplit import (Budget, cross_edges, schedule_parts,
+                                  split_workflow, validate_split)
+from repro.core.ir import Job, WorkflowIR
+
+
+def chain(n):
+    wf = WorkflowIR("chain")
+    prev = None
+    for i in range(n):
+        wf.add_job(Job(name=f"j{i}"))
+        if prev:
+            wf.add_edge(prev, f"j{i}")
+        prev = f"j{i}"
+    return wf
+
+
+def wide(n):
+    wf = WorkflowIR("wide")
+    wf.add_job(Job(name="root"))
+    for i in range(n):
+        wf.add_job(Job(name=f"w{i}"))
+        wf.add_edge("root", f"w{i}")
+    return wf
+
+
+def test_small_workflow_not_split():
+    wf = chain(10)
+    subs = split_workflow(wf, Budget(steps=200))
+    assert len(subs) == 1
+
+
+def test_chain_split_respects_budget():
+    wf = chain(500)
+    b = Budget(steps=100)
+    subs = split_workflow(wf, b)
+    assert len(subs) == 5
+    validate_split(wf, subs, b)
+
+
+def test_wide_split_parallel_waves():
+    wf = wide(300)
+    b = Budget(steps=100)
+    subs = split_workflow(wf, b)
+    validate_split(wf, subs, b)
+    waves = schedule_parts(wf, subs)
+    # after the root's part completes, the rest can run in parallel
+    assert len(waves) <= len(subs)
+
+
+def test_spec_bytes_budget():
+    wf = chain(100)
+    b = Budget(spec_bytes=2000, steps=10_000)
+    subs = split_workflow(wf, b)
+    assert len(subs) > 1
+    validate_split(wf, subs, b)
+
+
+def test_cross_edges_flow_forward():
+    wf = chain(300)
+    subs = split_workflow(wf, Budget(steps=64))
+    for s, d, a, b in cross_edges(wf, subs):
+        assert a < b, "cross edge must flow to a later part"

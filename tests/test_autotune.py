@@ -1,0 +1,30 @@
+from repro.core.autotune import (DataCard, ModelCard, default_search_space,
+                                 train_real_model, tune)
+
+
+def test_tune_picks_reasonable_lr():
+    r = tune(DataCard("d", n_examples=100_000),
+             ModelCard("m", n_params=1e8))
+    lr = r.best["learning_rate"]
+    assert 1e-4 <= lr <= 1e-2
+    assert len(r.predicted_logs) == len(default_search_space())
+
+
+def test_tune_scales_lr_with_model_size():
+    small = tune(DataCard("d"), ModelCard("m", n_params=1e6)).best
+    big = tune(DataCard("d"), ModelCard("m", n_params=1e10)).best
+    assert small["learning_rate"] >= big["learning_rate"]
+
+
+def test_real_model_training_improves():
+    out = train_real_model({"learning_rate": 3e-3, "batch_size": 16},
+                           steps=40)
+    assert out["losses"][0] > out["final_loss"]
+
+
+def test_real_model_bad_lr_is_worse():
+    good = train_real_model({"learning_rate": 3e-3, "batch_size": 16},
+                            steps=30)
+    bad = train_real_model({"learning_rate": 3.0, "batch_size": 16},
+                           steps=30)
+    assert good["final_loss"] < bad["final_loss"]

@@ -1,0 +1,118 @@
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.caching import (CacheStore, CachedArtifact, CoulerPolicy,
+                                FIFOPolicy, LRUPolicy, NoCache, CacheAll,
+                                importance, reconstruction_cost, reuse_value,
+                                sizeof)
+from repro.core.ir import Job, WorkflowIR
+
+
+def chain_wf(n=6):
+    wf = WorkflowIR("c")
+    prev = None
+    for i in range(n):
+        wf.add_job(Job(name=f"j{i}", est_time_s=1.0 + i))
+        if prev:
+            wf.add_edge(prev, f"j{i}")
+        prev = f"j{i}"
+    return wf
+
+
+def fan_wf(fanout=4):
+    """root -> mid -> {leaf_i}: mid's artifact has high reuse value."""
+    wf = WorkflowIR("f")
+    wf.add_job(Job(name="root", est_time_s=5))
+    wf.add_job(Job(name="mid", est_time_s=3))
+    wf.add_edge("root", "mid")
+    for i in range(fanout):
+        wf.add_job(Job(name=f"leaf{i}", est_time_s=1))
+        wf.add_edge("mid", f"leaf{i}")
+    return wf
+
+
+def test_eq3_truncates_at_cached():
+    wf = chain_wf()
+    full = reconstruction_cost(wf, "j5", cached_producers=set())
+    truncated = reconstruction_cost(wf, "j5", cached_producers={"j3"})
+    assert truncated < full
+
+
+def test_eq4_reuse_grows_with_fanout():
+    assert reuse_value(fan_wf(6), "mid") > reuse_value(fan_wf(2), "mid")
+    # sink artifact has no successors -> zero reuse value
+    assert reuse_value(chain_wf(), "j5") == 0.0
+
+
+def test_eq6_monotonicity():
+    base = importance(10, 2, 0.5)
+    assert importance(100, 2, 0.5) > base          # higher rebuild cost
+    assert importance(10, 4, 0.5) > base           # higher reuse
+    assert importance(10, 2, 0.1) < base           # cheaper-to-store wins
+    assert importance(0, 0, 1e9) == pytest.approx(-0.0, abs=1e-6)
+
+
+def test_store_capacity_and_eviction():
+    store = CacheStore(capacity_bytes=300, policy=FIFOPolicy())
+    for i in range(5):
+        store.offer(f"a{i}", b"x" * 100, 1.0, producer=f"j{i}")
+    assert store.used_bytes <= 300
+    assert len(store.items) == 3
+    assert "a0" not in store.items and "a4" in store.items   # FIFO evicts oldest
+
+
+def test_lru_evicts_least_recent():
+    store = CacheStore(capacity_bytes=300, policy=LRUPolicy())
+    for i in range(3):
+        store.offer(f"a{i}", b"x" * 100, 1.0, producer=f"j{i}")
+    store.get("a0")                         # refresh a0
+    store.offer("a3", b"x" * 100, 1.0, producer="j3")
+    assert "a0" in store.items and "a1" not in store.items
+
+
+def test_none_and_all_policies():
+    none = CacheStore(capacity_bytes=1000, policy=NoCache())
+    assert not none.offer("a", b"xx", 1.0, producer="j")
+    alls = CacheStore(capacity_bytes=1000, policy=CacheAll())
+    assert alls.offer("a", b"xx", 1.0, producer="j")
+
+
+def test_couler_policy_prefers_high_value_artifacts():
+    """Algorithm 2: the fan-out artifact (high F) should displace a
+    leaf artifact (no successors) when space runs out."""
+    wf = fan_wf(5)
+    store = CacheStore(capacity_bytes=150, policy=CoulerPolicy())
+    store.attach_workflow(wf)
+    assert store.offer("leaf0:out", b"x" * 100, 0.5, producer="leaf0")
+    # mid has 5 successors -> much higher importance; should evict leaf0
+    assert store.offer("mid:out", b"y" * 100, 3.0, producer="mid")
+    assert "mid:out" in store.items
+    assert "leaf0:out" not in store.items
+
+
+def test_couler_policy_rejects_low_value_when_full():
+    wf = fan_wf(5)
+    store = CacheStore(capacity_bytes=150, policy=CoulerPolicy())
+    store.attach_workflow(wf)
+    assert store.offer("mid:out", b"y" * 100, 3.0, producer="mid")
+    assert not store.offer("leaf1:out", b"x" * 100, 0.5, producer="leaf1")
+    assert "mid:out" in store.items
+
+
+def test_oversized_artifact_rejected():
+    store = CacheStore(capacity_bytes=10, policy=CacheAll())
+    assert not store.offer("big", b"x" * 100, 1.0, producer="j")
+
+
+def test_hit_ratio_accounting():
+    store = CacheStore(capacity_bytes=1000, policy=CacheAll())
+    store.offer("a", 1, 1.0, producer="j")
+    assert store.get("a") is not None
+    assert store.get("b") is None
+    assert store.hit_ratio() == 0.5
+
+
+def test_sizeof_numpy():
+    assert sizeof(np.zeros((10, 10), np.float32)) == 400

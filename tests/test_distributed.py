@@ -1,0 +1,20 @@
+"""Multi-device integration tests (subprocess: 8 fake host devices so the
+in-process tests keep seeing 1 device, per task spec)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.timeout(900)
+def test_distributed_suite():
+    r = subprocess.run(
+        [sys.executable, os.path.join(HERE, "distributed_worker.py")],
+        capture_output=True, text=True, timeout=850)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr[-4000:])
+    assert r.returncode == 0
+    assert "ALL DISTRIBUTED OK" in r.stdout

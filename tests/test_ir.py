@@ -1,0 +1,73 @@
+import pytest
+
+from repro.core.ir import Condition, Job, Resources, WorkflowIR
+
+
+def make_chain(n=5):
+    wf = WorkflowIR("chain")
+    prev = None
+    for i in range(n):
+        wf.add_job(Job(name=f"j{i}", est_time_s=float(i + 1)))
+        if prev:
+            wf.add_edge(prev, f"j{i}")
+        prev = f"j{i}"
+    return wf
+
+
+def test_topo_and_validate():
+    wf = make_chain()
+    assert wf.topo_order() == [f"j{i}" for i in range(5)]
+    wf.validate()
+
+
+def test_cycle_detection():
+    wf = make_chain(3)
+    wf.add_edge("j2", "j0")
+    with pytest.raises(ValueError):
+        wf.topo_order()
+
+
+def test_critical_path():
+    wf = WorkflowIR("d")
+    for n, t in [("a", 1), ("b", 5), ("c", 1), ("d", 1)]:
+        wf.add_job(Job(name=n, est_time_s=t))
+    wf.add_edge("a", "b")
+    wf.add_edge("a", "c")
+    wf.add_edge("b", "d")
+    wf.add_edge("c", "d")
+    total, path = wf.critical_path()
+    assert total == 7 and path == ["a", "b", "d"]
+
+
+def test_adjacency_and_degrees():
+    wf = make_chain(3)
+    A = wf.adjacency()
+    assert A.sum() == 2
+    d = wf.degrees()
+    assert list(d) == [1, 2, 1]
+
+
+def test_json_roundtrip():
+    wf = make_chain(4)
+    wf.jobs["j1"].condition = Condition("equal", "j0:out", "x")
+    wf.jobs["j2"].resources = Resources(cpu=4, mem_bytes=123)
+    wf2 = WorkflowIR.from_json(wf.to_json())
+    assert set(wf2.jobs) == set(wf.jobs)
+    assert wf2.edges == wf.edges
+    assert wf2.jobs["j1"].condition.kind == "equal"
+    assert wf2.jobs["j2"].resources.cpu == 4
+    assert wf2.fingerprint() == WorkflowIR.from_json(wf2.to_json()).fingerprint()
+
+
+def test_budget_components():
+    wf = make_chain(10)
+    b = wf.budget()
+    assert b["steps"] == 10
+    assert b["spec_bytes"] > 0
+    assert b["pods"] >= 10
+
+
+def test_self_edge_rejected():
+    wf = make_chain(2)
+    with pytest.raises(ValueError):
+        wf.add_edge("j0", "j0")

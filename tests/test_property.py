@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.autosplit import Budget, split_workflow, validate_split
+from repro.core.caching import (CacheStore, CoulerPolicy, FIFOPolicy,
+                                LRUPolicy, importance)
+from repro.core.ir import Job, WorkflowIR
+
+
+# ---------------------------------------------------------------------------
+# random DAG strategy: edges only point forward -> always acyclic
+# ---------------------------------------------------------------------------
+
+@st.composite
+def dags(draw, max_nodes=40):
+    n = draw(st.integers(min_value=1, max_value=max_nodes))
+    wf = WorkflowIR("rand")
+    for i in range(n):
+        wf.add_job(Job(name=f"j{i}",
+                       est_time_s=draw(st.floats(0.1, 10.0)),
+                       resources=__import__(
+                           "repro.core.ir", fromlist=["Resources"]
+                       ).Resources(cpu=draw(st.floats(0.5, 8.0)))))
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()) and draw(st.integers(0, 3)) == 0:
+                wf.add_edge(f"j{i}", f"j{j}")
+    return wf
+
+
+@given(dags(), st.integers(min_value=2, max_value=20))
+@settings(max_examples=40, deadline=None)
+def test_split_partitions_any_dag(wf, steps):
+    b = Budget(steps=steps, spec_bytes=10**9, pods=10**9)
+    subs = split_workflow(wf, b)
+    validate_split(wf, subs, b)
+
+
+@given(dags())
+@settings(max_examples=30, deadline=None)
+def test_ir_json_roundtrip(wf):
+    wf2 = WorkflowIR.from_json(wf.to_json())
+    assert set(wf2.jobs) == set(wf.jobs)
+    assert wf2.edges == wf.edges
+    assert wf2.topo_order() == wf.topo_order()
+
+
+@given(dags())
+@settings(max_examples=30, deadline=None)
+def test_critical_path_bounds(wf):
+    total, path = wf.critical_path()
+    times = [wf.jobs[n].est_time_s for n in wf.jobs]
+    assert total <= sum(times) + 1e-9
+    assert total >= max(times) - 1e-9
+    # path must follow edges
+    for a, b in zip(path, path[1:]):
+        assert (a, b) in wf.edges
+
+
+# ---------------------------------------------------------------------------
+# cache store invariants under arbitrary offer/get sequences
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 30),          # artifact id
+                          st.integers(1, 400),         # size
+                          st.floats(0.0, 10.0)),       # compute time
+                min_size=1, max_size=80),
+       st.sampled_from(["fifo", "lru", "couler"]))
+@settings(max_examples=60, deadline=None)
+def test_cache_never_exceeds_capacity(ops, policy_name):
+    policy = {"fifo": FIFOPolicy, "lru": LRUPolicy,
+              "couler": CoulerPolicy}[policy_name]()
+    store = CacheStore(capacity_bytes=1000, policy=policy)
+    for aid, size, t in ops:
+        store.offer(f"a{aid}", b"x" * size, t, producer=f"j{aid}")
+        assert store.used_bytes <= store.capacity_bytes
+        assert store.used_bytes == sum(a.bytes for a in store.items.values())
+    s = store.stats
+    assert s["admitted"] - s["evictions"] == len(store.items)
+
+
+@given(st.floats(0, 1e6), st.floats(0, 100), st.floats(0, 1.0),
+       st.floats(0.1, 5.0), st.floats(0.1, 5.0))
+@settings(max_examples=100, deadline=None)
+def test_importance_monotone(l, f, v, alpha, beta):
+    base = importance(l, f, v, alpha, beta)
+    assert importance(l * 2 + 1, f, v, alpha, beta) >= base
+    assert importance(l, f + 1, v, alpha, beta) >= base
+    assert importance(l, f, v + 1, alpha, beta) >= base
+    assert np.isfinite(base)
+
+
+# ---------------------------------------------------------------------------
+# int8 compression error bound (single-participant path runs in-process)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 500), st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_quantize_roundtrip_error_bound(n, scale_mag):
+    import jax.numpy as jnp
+    from repro.training.compression import _dequantize, _quantize
+    rng = np.random.default_rng(n)
+    g = jnp.asarray(rng.normal(size=(n,)) * scale_mag, jnp.float32)
+    s = jnp.max(jnp.abs(g)) + 1e-12
+    q = _quantize(g, s)
+    back = _dequantize(q.astype(jnp.int32), s, 1)
+    # max error is half a quantization step
+    assert float(jnp.max(jnp.abs(back - g))) <= float(s) / 127.0 * 0.51 + 1e-6

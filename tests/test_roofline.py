@@ -1,0 +1,79 @@
+"""HLO cost-parser unit tests, including the while-trip-count handling the
+stock ``cost_analysis()`` gets wrong (it counts scan bodies once)."""
+import textwrap
+
+from repro.roofline.analysis import (_parse_computations, _trip_count,
+                                     analyze_hlo, model_flops)
+
+HLO = textwrap.dedent("""\
+    HloModule test, num_partitions=8
+
+    %body (param: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+      %param = (s32[], f32[4,16]{1,0}) parameter(0)
+      %gte0 = s32[] get-tuple-element(%param), index=0
+      %gte1 = f32[4,16]{1,0} get-tuple-element(%param), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot = f32[4,16]{1,0} dot(%gte1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[4,16]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%sum
+      %one = s32[] constant(1)
+      %next = s32[] add(%gte0, %one)
+      ROOT %tup = (s32[], f32[4,16]{1,0}) tuple(%next, %ar)
+    }
+
+    %sum (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %add = f32[] add(%a, %b)
+    }
+
+    %cond (param.1: (s32[], f32[4,16])) -> pred[] {
+      %param.1 = (s32[], f32[4,16]{1,0}) parameter(0)
+      %it = s32[] get-tuple-element(%param.1), index=0
+      %n = s32[] constant(12)
+      ROOT %lt = pred[] compare(%it, %n), direction=LT
+    }
+
+    ENTRY %main (x: f32[4,16]) -> f32[4,16] {
+      %x = f32[4,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[4,16]{1,0}) tuple(%zero, %x)
+      %w2 = f32[16,8]{1,0} constant({...})
+      %head = f32[4,8]{1,0} dot(%x, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ag = f32[4,64]{0,1} all-gather(%x), channel_id=2, replica_groups=[2,4]<=[8], dimensions={1}
+      %loop = (s32[], f32[4,16]{1,0}) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[4,16]{1,0} get-tuple-element(%loop), index=1
+    }
+""")
+
+
+def test_while_trip_count_multiplies_costs():
+    t = analyze_hlo(HLO)
+    # body dot: 2*4*16*16 = 2048 flops x 12 trips; head dot: 2*4*8*16 = 1024
+    assert t.flops == 2048 * 12 + 1024
+    # all-reduce in body: 4*16*4B=256B result, ring 2*(n-1)/n with n=4
+    ar = 256 * 2 * 3 / 4 * 12
+    ag = 4 * 64 * 4 * 3 / 4
+    assert abs(t.coll_bytes - (ar + ag)) < 1e-6
+    assert t.coll_by_kind["all-reduce"] == ar
+
+
+def test_trip_count_ge_direction():
+    comps, _ = _parse_computations(HLO)
+    assert _trip_count(comps, "cond") == 12
+
+
+def test_dominant_term_selection():
+    t = analyze_hlo(HLO)
+    assert t.dominant in ("compute", "memory", "collective")
+
+
+def test_model_flops_kinds():
+    from repro.configs import get_arch, get_shape
+    cfg = get_arch("stablelm-1.6b").model
+    n = cfg.param_counts()["active"]
+    tr = model_flops(cfg, get_shape("train_4k"), n)
+    pf = model_flops(cfg, get_shape("prefill_32k"), n)
+    dc = model_flops(cfg, get_shape("decode_32k"), n)
+    assert tr == 6.0 * n * 4096 * 256
+    assert pf == 2.0 * n * 32768 * 32
+    assert dc == 2.0 * n * 128

@@ -1,0 +1,34 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine
+
+
+@pytest.mark.parametrize("aid", ["stablelm-1.6b", "mamba2-370m",
+                                 "zamba2-1.2b"])
+def test_generate_batched(aid):
+    cfg = reduced(get_arch(aid).model).replace(param_dtype="float32",
+                                               compute_dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_len=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 100)
+    res = eng.generate(prompts, gen_len=8)
+    assert len(res.tokens) == 2 and len(res.tokens[0]) == 8
+    assert res.tokens_per_s > 0
+
+
+def test_temperature_sampling_differs():
+    cfg = reduced(get_arch("stablelm-1.6b").model).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_len=32)
+    prompts = jnp.ones((1, 4), jnp.int32)
+    a = eng.generate(prompts, gen_len=10, temperature=1.5, seed=1)
+    b = eng.generate(prompts, gen_len=10, temperature=1.5, seed=2)
+    assert a.tokens != b.tokens          # different seeds -> different samples
+    g = eng.generate(prompts, gen_len=10, temperature=0.0)
+    g2 = eng.generate(prompts, gen_len=10, temperature=0.0)
+    assert g.tokens == g2.tokens         # greedy is deterministic

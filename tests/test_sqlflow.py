@@ -1,0 +1,65 @@
+import pytest
+
+from repro.core.engines.local import LocalEngine
+from repro.core.sqlflow import (PredictStatement, TrainStatement, parse,
+                                run_sql, to_workflow)
+
+TRAIN_SQL = """
+SELECT * FROM iris.train
+TO TRAIN DNNClassifier
+WITH model.n_classes = 3, model.hidden_units = [10]
+COLUMN sepal_len, sepal_width, petal_length
+LABEL class
+INTO sqlflow_models.my_dnn_model;
+"""
+
+PREDICT_SQL = """
+SELECT * FROM iris.test
+TO PREDICT iris.predict.class
+USING sqlflow_models.my_dnn_model;
+"""
+
+
+def test_parse_train():
+    s = parse(TRAIN_SQL)
+    assert isinstance(s, TrainStatement)
+    assert s.table == "iris.train"
+    assert s.estimator == "DNNClassifier"
+    assert s.attrs["model.n_classes"] == 3
+    assert s.attrs["model.hidden_units"] == [10]
+    assert s.columns == ["sepal_len", "sepal_width", "petal_length"]
+    assert s.label == "class"
+    assert s.into == "sqlflow_models.my_dnn_model"
+
+
+def test_parse_predict():
+    s = parse(PREDICT_SQL)
+    assert isinstance(s, PredictStatement)
+    assert s.model == "sqlflow_models.my_dnn_model"
+    assert s.output == "iris.predict.class"
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse("DROP TABLE users;")
+
+
+def test_train_statement_builds_and_runs():
+    ir = to_workflow(TRAIN_SQL)
+    assert list(ir.topo_order()) == ["select", "train", "save-model"]
+    run = LocalEngine().submit(ir)
+    assert run.succeeded()
+    saved = run.artifacts["save-model:out"]
+    assert saved["saved_as"] == "sqlflow_models.my_dnn_model"
+    assert saved["weights"].shape == (3, 3)
+
+
+def test_train_then_predict_pipeline():
+    run1 = run_sql(TRAIN_SQL)
+    model = run1.artifacts["save-model:out"]
+    run2 = run_sql(PREDICT_SQL,
+                   model_registry={model["saved_as"]: model})
+    assert run2.succeeded()
+    out = run2.artifacts["predict:out"]
+    assert out["output"] == "iris.predict.class"
+    assert len(out["preds"]) == 64

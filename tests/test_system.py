@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests: NL -> workflow -> optimized execution with
+caching / split / fault tolerance — the paper's full loop on a real (small)
+JAX training payload."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import couler
+from repro.core.autosplit import Budget
+from repro.core.caching import CacheStore, CoulerPolicy
+from repro.core.engines.base import StepStatus
+from repro.core.engines.local import LocalEngine
+from repro.core.nl2wf import nl_to_workflow
+from repro.core.llm import TemplateLLM
+
+
+def test_nl_to_execution_end_to_end():
+    """NL description -> generated COULER code -> IR -> local engine run."""
+    res = nl_to_workflow(
+        "Load the dataset named demo, preprocess it, train the ResNet and "
+        "ViT models, evaluate accuracy, select the best model and generate "
+        "a report.", llm=TemplateLLM("gpt-4"), temperature=0.0, seed=3)
+    assert res.error is None
+    run = LocalEngine().submit(res.workflow)
+    assert run.succeeded(), run.counts()
+    assert any(k.startswith("select-best") for k in run.artifacts)
+
+
+def test_ml_workflow_with_real_training_and_cache_reuse():
+    """Iterative-development loop: data prep cached across submissions,
+    second run skips tokenization (the paper's core §IV.A motivation)."""
+    from repro.configs import get_arch, reduced
+    from repro.training import train as TR
+
+    spec = get_arch("stablelm-1.6b")
+    cfg = reduced(spec.model).replace(param_dtype="float32",
+                                      compute_dtype="float32")
+    tcfg = spec.train.__class__(optimizer="adamw", learning_rate=1e-3,
+                                remat="none")
+    prep_calls = {"n": 0}
+
+    def tokenize():
+        prep_calls["n"] += 1
+        rng = np.random.default_rng(0)
+        return rng.integers(0, cfg.vocab_size, (8, 33)).astype(np.int32)
+
+    def train(data, steps=3):
+        state = TR.init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(TR.make_train_step(cfg, tcfg))
+        losses = []
+        for _ in range(steps):
+            batch = {"tokens": jnp.asarray(data[:, :-1]),
+                     "targets": jnp.asarray(data[:, 1:])}
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        return losses
+
+    def evaluate(losses):
+        return losses[-1] < losses[0]
+
+    cache = CacheStore(capacity_bytes=1 << 24, policy=CoulerPolicy())
+    eng = LocalEngine(cache=cache, enable_speculation=False)
+
+    def build():
+        with couler.workflow("train-pipeline") as ir:
+            d = couler.run_step(tokenize, step_name="tokenize")
+            t = couler.run_step(train, d, step_name="train")
+            couler.run_step(evaluate, t, step_name="eval")
+        return ir
+
+    r1 = eng.submit(build())
+    assert r1.succeeded()
+    assert r1.artifacts["eval:out"] is True          # loss went down
+    r2 = eng.submit(build())
+    assert r2.steps["tokenize"].status == StepStatus.CACHED
+    assert prep_calls["n"] == 1
+
+
+def test_big_workflow_split_and_execute():
+    """A 300-step workflow is auto-split (Alg. 3) and still executes
+    correctly through the engine."""
+    with couler.workflow("big") as ir:
+        prev = couler.run_step(lambda: 0, step_name="s0", cacheable=False)
+        for i in range(1, 300):
+            prev = couler.run_step(lambda x: x + 1, prev,
+                                   step_name=f"s{i}", cacheable=False)
+    eng = LocalEngine(budget=Budget(steps=64))
+    run = eng.submit(ir, optimize=True)
+    assert run.succeeded()
+    assert run.artifacts["s299:out"] == 299
+
+
+def test_model_selection_workflow_automl():
+    """Paper App. F: concurrent model training + selection."""
+    def train_model(kind):
+        return {"xgboost": 0.91, "lightgbm": 0.93}[kind]
+
+    with couler.workflow("automl") as ir:
+        outs = couler.concurrent([
+            lambda: couler.run_step(train_model, "xgboost",
+                                    step_name="train-xgboost"),
+            lambda: couler.run_step(train_model, "lightgbm",
+                                    step_name="train-lgbm"),
+        ])
+        best = couler.run_step(lambda a, b: "lightgbm" if b > a else "xgboost",
+                               outs[0], outs[1], step_name="select")
+    run = LocalEngine().submit(ir)
+    assert run.artifacts["select:out"] == "lightgbm"
