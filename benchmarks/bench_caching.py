@@ -39,6 +39,7 @@ def run_one(scenario: str, policy_name: str, capacity_bytes: int,
         "policy": policy_name,
         "capacity_mb": capacity_bytes / 2**20,
         "wall_s": round(wall, 3),
+        "score_s": round(cache.stats["score_time_s"], 4),
         "hit_ratio": round(cache.hit_ratio(), 4),
         "peak_cache_mb": round(cache.used_bytes / 2**20, 3),
         "evictions": cache.stats["evictions"],

@@ -1,8 +1,12 @@
 """Benchmark driver — one suite per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows; detailed JSON per suite is
-written to out/bench/<suite>.json.
+written to out/bench/<suite>.json. ``--quick`` runs every suite at reduced
+scale (CI smoke mode) and a consolidated ``BENCH_<date>.json`` — one
+object with every suite's rows plus wall times — is always emitted.
 """
+import argparse
+import datetime
 import json
 import sys
 import time
@@ -14,52 +18,75 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 OUT = Path("out/bench")
 
 SUITES = [
-    # (name, import path, derived-metric extractor)
-    ("caching_fig7", "benchmarks.bench_caching",
+    # (name, import path, quick-mode kwargs, derived-metric extractor)
+    ("caching_fig7", "benchmarks.bench_caching", {"scale": 0.4},
      lambda rows: "couler_beats_fifo_lru_in=" + str(sum(
          1 for s in {"multimodal", "image_seg", "lm_finetune"}
          if [r["wall_s"] for r in rows
              if r["scenario"] == s and r["policy"] == "couler"][0]
          < min(r["wall_s"] for r in rows
                if r["scenario"] == s and r["policy"] in ("fifo", "lru"))))),
-    ("cache_sizes_appDB", "benchmarks.bench_cache_sizes",
+    ("cache_sizes_appDB", "benchmarks.bench_cache_sizes", {"scale": 0.4},
      lambda rows: "hit_ratio_range=%.2f-%.2f" % (
          min(r["hit_ratio"] for r in rows),
          max(r["hit_ratio"] for r in rows))),
-    ("nl2wf_tableII", "benchmarks.bench_nl2wf",
+    ("nl2wf_tableII", "benchmarks.bench_nl2wf", {"n_seeds": 2},
      lambda rows: "gpt4_ours_pass@5=" + str(
          [r for r in rows if r.get("model") == "gpt-4+ours"][0]["pass@5"])),
-    ("autotune_fig8", "benchmarks.bench_autotune",
+    ("autotune_fig8", "benchmarks.bench_autotune", {"steps": 15},
      lambda rows: "ours_final_loss=" + str(
          [r for r in rows if r["config"] == "HP:Ours"][0]["final_loss"])),
-    ("split_secIVB", "benchmarks.bench_split",
+    ("split_secIVB", "benchmarks.bench_split", {},
      lambda rows: "all_within_budget=" + str(
          all(r["within_crd_budget"] for r in rows))),
-    ("throughput_rq1", "benchmarks.bench_throughput",
+    ("throughput_rq1", "benchmarks.bench_throughput", {"n_workflows": 300},
      lambda rows: "workflows_per_s=" + str(rows[0]["workflows_per_s"])),
-    ("learning_tableIV", "benchmarks.bench_learning",
+    ("learning_tableIV", "benchmarks.bench_learning", {},
      lambda rows: "couler_loc=" + str(
          [r for r in rows if r["interface"] == "couler"][0]["loc"])),
-    ("roofline_dryrun", "benchmarks.roofline_report",
+    ("roofline_dryrun", "benchmarks.roofline_report", {},
      lambda rows: "cells_ok=" + str(rows[0]["cells_ok"])),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="run each suite at reduced scale (CI smoke mode)")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="suite names to run (default: all)")
+    args = ap.parse_args(argv)
+
     OUT.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failures = []
-    for name, mod_path, derive in SUITES:
+    consolidated = {
+        "date": datetime.date.today().isoformat(),
+        "mode": "quick" if args.quick else "full",
+        "suites": {},
+    }
+    for name, mod_path, quick_kwargs, derive in SUITES:
+        if args.only and name not in args.only:
+            continue
         t0 = time.time()
         try:
             mod = __import__(mod_path, fromlist=["run"])
-            rows = mod.run()
+            rows = mod.run(**(quick_kwargs if args.quick else {}))
             dur_us = (time.time() - t0) * 1e6
             (OUT / f"{name}.json").write_text(json.dumps(rows, indent=1))
+            consolidated["suites"][name] = {
+                "wall_s": round(dur_us / 1e6, 3),
+                "derived": derive(rows),
+                "rows": rows,
+            }
             print(f"{name},{dur_us:.0f},{derive(rows)}")
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
+            consolidated["suites"][name] = {"error": repr(e)}
             print(f"{name},0,ERROR:{type(e).__name__}")
+    bench_file = OUT / f"BENCH_{consolidated['date']}.json"
+    bench_file.write_text(json.dumps(consolidated, indent=1))
+    print(f"# consolidated -> {bench_file}", file=sys.stderr)
     if failures:
         for n, e in failures:
             print(f"# FAILED {n}: {e}", file=sys.stderr)

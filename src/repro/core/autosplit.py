@@ -45,24 +45,37 @@ def split_workflow(wf: WorkflowIR, budget: Optional[Budget] = None
         return [wf]
 
     # DFS over the DAG in topological order (ensures cross-edges only flow
-    # forward across sub-workflow boundaries)
+    # forward across sub-workflow boundaries). The candidate's budget is
+    # accumulated incrementally — each vertex contributes its (spec bytes,
+    # step, pods) terms exactly once — instead of re-deriving the whole
+    # candidate's budget (an O(|cand|) json serialization) at every vertex.
     visited: Set[str] = set()
     cand: List[str] = []
     out_groups: List[List[str]] = []
+    acc = {"spec_bytes": 0.0, "steps": 0.0, "pods": 0.0}
 
     def flush():
         if cand:
             out_groups.append(list(cand))
             cand.clear()
+            acc["spec_bytes"] = acc["steps"] = acc["pods"] = 0.0
 
     def visit(v: str):
         if v in visited:
             return
         visited.add(v)
-        trial = cand + [v]
-        if budget.exceeded_by(_budget_of(wf, trial)):   # lines 15-19
+        job = wf.jobs[v]
+        spec = job.spec_size_bytes()
+        pods = max(1.0, job.resources.cpu)
+        trial = {"spec_bytes": acc["spec_bytes"] + spec,
+                 "steps": acc["steps"] + 1.0,
+                 "pods": acc["pods"] + pods}
+        if budget.exceeded_by(trial):                   # lines 15-19
             flush()
         cand.append(v)
+        acc["spec_bytes"] += spec
+        acc["steps"] += 1.0
+        acc["pods"] += pods
         for nxt in sorted(wf.successors(v)):            # lines 21-24
             # only descend once all predecessors are visited (DAG safety)
             if all(p in visited for p in wf.predecessors(nxt)):

@@ -7,6 +7,15 @@ balanced. This module implements that scheduler over an event-driven
 simulator (time advances to the next job completion; no sleeping), which is
 what the RQ1-style throughput benchmark drives with 22k workflows/day-scale
 loads.
+
+Scheduling is fully event-driven: each workflow keeps a min-heap of ready
+job indices fed by indegree decrements, and resource-blocked jobs park in
+wake-on-cause retry sets — user-quota-blocked jobs are only re-tried when a
+job of that same user completes (the only event that can lower the user's
+usage), cluster-blocked jobs whenever any completion frees cluster capacity
+— so each event touches O(woken + newly-ready) jobs, O((V+E)·log V) per
+batch, instead of the former full rescan of every job of every active
+workflow per event.
 """
 from __future__ import annotations
 
@@ -58,12 +67,34 @@ class UserQuota:
 
 @dataclass(order=True)
 class _QItem:
-    sort_key: Tuple
-    seq: int
+    sort_key: Tuple                     # (-priority, seq): FIFO within a tier
     wf: WorkflowIR = field(compare=False)
     user: str = field(compare=False)
     priority: int = field(compare=False)
     submit_t: float = field(compare=False)
+
+
+class _WfState:
+    """Per-admitted-workflow scheduling state."""
+
+    __slots__ = ("wf", "user", "run", "indeg", "remaining", "order", "jidx",
+                 "ready", "idx")
+
+    def __init__(self, wf: WorkflowIR, user: str, idx: int):
+        self.wf = wf
+        self.user = user
+        self.idx = idx                      # admission order
+        self.run = WorkflowRun(workflow=wf)
+        self.order = list(wf.jobs)          # job insertion order
+        self.jidx = {n: i for i, n in enumerate(self.order)}
+        self.indeg = {n: wf.in_degree(n) for n in self.order}
+        self.remaining = len(self.order)
+        # min-heap of job indices whose deps are satisfied but not launched
+        self.ready: List[int] = [i for i, n in enumerate(self.order)
+                                 if self.indeg[n] == 0]
+        heapq.heapify(self.ready)
+        for n in self.order:
+            self.run.steps[n] = StepRecord()
 
 
 class MultiClusterEngine(Engine):
@@ -78,6 +109,8 @@ class MultiClusterEngine(Engine):
             Cluster("cpu-cluster", cpu=2048, mem_bytes=8192 * 2**30),
             Cluster("far-storage", cpu=1024, mem_bytes=4096 * 2**30),
         ]
+        # precomputed candidate list: GPU jobs may only land on GPU clusters
+        self._gpu_clusters = [c for c in self.clusters if c.gpu > 0]
         self.quotas = quotas or {}
         self._seq = itertools.count()
         self.metrics = {"scheduled_jobs": 0, "completed_workflows": 0,
@@ -92,12 +125,14 @@ class MultiClusterEngine(Engine):
     def _pick_cluster(self, job) -> Optional[Cluster]:
         """Weighted choice: prefer fitting cluster with the lowest load;
         GPU jobs must land on a GPU cluster."""
-        cands = [c for c in self.clusters if c.fits(job)]
-        if job.resources.gpu > 0:
-            cands = [c for c in cands if c.gpu > 0]
-        if not cands:
-            return None
-        return min(cands, key=lambda c: c.load())
+        pool = self._gpu_clusters if job.resources.gpu > 0 else self.clusters
+        best, best_load = None, float("inf")
+        for c in pool:
+            if c.fits(job):
+                l = c.load()
+                if l < best_load:
+                    best, best_load = c, l
+        return best
 
     def submit_many(self, workflows: List[Tuple[WorkflowIR, str, int]]
                     ) -> Dict[str, WorkflowRun]:
@@ -109,42 +144,61 @@ class MultiClusterEngine(Engine):
         for wf, user, prio in workflows:
             wf.validate()
             heapq.heappush(queue, _QItem((-prio, next(self._seq)),
-                                         next(self._seq), wf, user, prio, 0.0))
+                                         wf, user, prio, 0.0))
         runs: Dict[str, WorkflowRun] = {}
-        # active workflow state: remaining deps per job
-        active: List[Dict] = []
+        active: List[_WfState] = []
         # (finish_time, seq, cluster, user, wf_state, job_name)
-        events: List[Tuple[float, int, Cluster, str, Dict, str]] = []
+        events: List[Tuple[float, int, Cluster, str, _WfState, str]] = []
         now = 0.0
+        # admission indices of workflows with launchable work, visited in
+        # admission order each pass; workflows with nothing ready are
+        # never touched
+        armed: List[int] = []
+        armed_set = set()
+        # wake-on-cause retry sets of (admission_idx, job_idx): a job that
+        # failed its user-quota check can only fit once that user's usage
+        # drops, so it waits for that user's next completion; a job with no
+        # fitting cluster retries whenever any completion frees capacity
+        quota_waiters: Dict[str, List[Tuple[int, int]]] = {}
+        cluster_waiters: List[Tuple[int, int]] = []
 
-        def admit_from_queue():
-            admitted = True
-            while queue and admitted:
-                item = queue[0]
-                st = {"wf": item.wf, "user": item.user,
-                      "indeg": {n: len(item.wf.predecessors(n))
-                                for n in item.wf.jobs},
-                      "remaining": len(item.wf.jobs),
-                      "run": WorkflowRun(workflow=item.wf)}
-                for n in item.wf.jobs:
-                    st["run"].steps[n] = StepRecord()
-                heapq.heappop(queue)
+        def arm(st: _WfState) -> None:
+            if st.idx not in armed_set:
+                armed_set.add(st.idx)
+                heapq.heappush(armed, st.idx)
+
+        def admit_from_queue() -> None:
+            # Admission is explicitly unconditional: workflow admission has
+            # no capacity gate — quota/cluster capacity is enforced per job
+            # at launch time, so the priority queue drains completely.
+            while queue:
+                item = heapq.heappop(queue)
+                st = _WfState(item.wf, item.user, len(active))
                 active.append(st)
-                runs[item.wf.name] = st["run"]
+                runs[item.wf.name] = st.run
+                arm(st)
 
-        def launch_ready():
-            for st in active:
-                wf = st["wf"]
-                for n, k in list(st["indeg"].items()):
-                    if k != 0 or st["run"].steps[n].status != StepStatus.PENDING:
-                        continue
+        def launch_pass() -> None:
+            # drain armed workflows in admission order (heap pops ascend)
+            batch: List[int] = []
+            while armed:
+                batch.append(heapq.heappop(armed))
+            armed_set.clear()
+            for ai in batch:
+                st = active[ai]
+                wf = st.wf
+                while st.ready:
+                    i = heapq.heappop(st.ready)
+                    n = st.order[i]
                     job = wf.jobs[n]
-                    q = self._quota(st["user"])
+                    q = self._quota(st.user)
                     if not q.fits(job):
+                        quota_waiters.setdefault(st.user, []).append((ai, i))
                         continue
                     c = self._pick_cluster(job)
                     if c is None:
                         self.metrics["failed_admission"] += 1
+                        cluster_waiters.append((ai, i))
                         continue
                     r = job.resources
                     c.used_cpu += r.cpu
@@ -153,18 +207,18 @@ class MultiClusterEngine(Engine):
                     q.used_cpu += r.cpu
                     q.used_mem += r.mem_bytes
                     q.used_gpu += r.gpu
-                    st["run"].steps[n].status = StepStatus.RUNNING
-                    st["run"].steps[n].start = now
+                    st.run.steps[n].status = StepStatus.RUNNING
+                    st.run.steps[n].start = now
                     self.metrics["scheduled_jobs"] += 1
                     heapq.heappush(events, (now + job.est_time_s,
-                                            next(self._seq), c, st["user"],
+                                            next(self._seq), c, st.user,
                                             st, n))
 
         admit_from_queue()
-        launch_ready()
+        launch_pass()
         while events:
             now, _, c, user, st, n = heapq.heappop(events)
-            job = st["wf"].jobs[n]
+            job = st.wf.jobs[n]
             r = job.resources
             c.used_cpu -= r.cpu
             c.used_mem -= r.mem_bytes
@@ -174,17 +228,34 @@ class MultiClusterEngine(Engine):
             q.used_mem -= r.mem_bytes
             q.used_gpu -= r.gpu
             self.metrics["cluster_busy_s"][c.name] += job.est_time_s * r.cpu
-            rec = st["run"].steps[n]
+            rec = st.run.steps[n]
             rec.status = StepStatus.SUCCEEDED
             rec.end = now
-            st["remaining"] -= 1
-            for s in st["wf"].successors(n):
-                st["indeg"][s] -= 1
-            if st["remaining"] == 0:
-                st["run"].status = "Succeeded"
-                st["run"].wall_time_s = now
+            st.remaining -= 1
+            newly_ready = False
+            for s in st.wf.successors(n):
+                st.indeg[s] -= 1
+                if st.indeg[s] == 0:
+                    heapq.heappush(st.ready, st.jidx[s])
+                    newly_ready = True
+            if st.remaining == 0:
+                st.run.status = "Succeeded"
+                st.run.wall_time_s = now
                 self.metrics["completed_workflows"] += 1
-            launch_ready()
+            if newly_ready:
+                arm(st)
+            # wake exactly the jobs this completion could unblock: the
+            # finishing user's quota-waiters, and (cluster capacity freed)
+            # every cluster-waiter
+            woken = quota_waiters.pop(user, [])
+            if cluster_waiters:
+                woken += cluster_waiters
+                cluster_waiters = []
+            for ai, i in woken:
+                stw = active[ai]
+                heapq.heappush(stw.ready, i)
+                arm(stw)
+            launch_pass()
         self.metrics["makespan_s"] = now
         return runs
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 import concurrent.futures as cf
 import hashlib
 import pickle
+import queue as queue_mod
 import threading
 import time
 from typing import Any, Dict, List, Optional, Set
@@ -66,6 +67,10 @@ class LocalEngine(Engine):
         self.straggler_factor = straggler_factor
         self.retry_backoff_s = retry_backoff_s
         self.enable_speculation = enable_speculation
+        # free-list of persistent 2-worker speculation executors, reused
+        # across step invocations instead of constructing one per step
+        self._spec_pools: List[cf.ThreadPoolExecutor] = []
+        self._spec_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def submit(self, wf: WorkflowIR, optimize: bool = True, **kw) -> WorkflowRun:
@@ -118,56 +123,74 @@ class LocalEngine(Engine):
 
     # ------------------------------------------------------------------
     def _run_part(self, wf: WorkflowIR, run: WorkflowRun) -> bool:
+        """Push-based completion scheduling: per-job indegree counters are
+        decremented by completion callbacks, so each finished step costs
+        O(out-degree) instead of an O(V·E) full ready-rescan, and the main
+        thread blocks on a completion queue (no polling timeout)."""
         self.cache.attach_workflow(run.workflow)
+        satisfied = (StepStatus.SUCCEEDED, StepStatus.SKIPPED,
+                     StepStatus.CACHED)
         done: Set[str] = {n for n, r in run.steps.items()
-                          if n in wf.jobs and r.status in
-                          (StepStatus.SUCCEEDED, StepStatus.SKIPPED,
-                           StepStatus.CACHED)}
-        failed = threading.Event()
-        lock = threading.Lock()
+                          if n in wf.jobs and r.status in satisfied}
+        total = len(wf.jobs)
+        if len(done) >= total:
+            return True
+        failed = False
+        completions: "queue_mod.SimpleQueue" = queue_mod.SimpleQueue()
+
+        # remaining unsatisfied dependencies per not-yet-done job; a pred
+        # outside this part that is not already satisfied never resolves
+        # here, which (as before) leaves the job pending and ends the part
+        indeg: Dict[str, int] = {}
+        ready: List[str] = []
+        for n in wf.jobs:
+            if n in done:
+                continue
+            k = 0
+            for p in run.workflow.predecessors(n):
+                if p not in wf.jobs and p not in run.steps:
+                    continue
+                rec = run.steps.get(p)
+                if rec is not None and rec.status in satisfied:
+                    continue
+                k += 1
+            indeg[n] = k
+            if k == 0:
+                ready.append(n)
 
         with cf.ThreadPoolExecutor(max_workers=self.max_workers) as pool:
-            inflight: Dict[cf.Future, str] = {}
+            inflight = 0
 
-            def ready_jobs() -> List[str]:
-                out = []
-                for n in wf.jobs:
-                    if n in done or n in inflight.values():
-                        continue
-                    if run.steps[n].status == StepStatus.RUNNING:
-                        continue
-                    preds = [p for p in run.workflow.predecessors(n)
-                             if p in wf.jobs or p in run.steps]
-                    if all(p in done or run.steps.get(
-                            p, StepRecord()).status in
-                            (StepStatus.SUCCEEDED, StepStatus.SKIPPED,
-                             StepStatus.CACHED) for p in preds):
-                        out.append(n)
-                return out
+            def launch(name: str) -> None:
+                fut = pool.submit(self._exec_step, wf.jobs[name], run)
+                fut.add_done_callback(
+                    lambda f, n=name: completions.put((n, f)))
 
-            while len(done) < len(wf.jobs) and not failed.is_set():
-                for n in ready_jobs():
-                    fut = pool.submit(self._exec_step, wf.jobs[n], run)
-                    inflight[fut] = n
-                if not inflight:
+            for n in ready:
+                launch(n)
+                inflight += 1
+            while inflight:
+                n, f = completions.get()
+                inflight -= 1
+                try:
+                    status = f.result()
+                except Exception as e:  # noqa: BLE001
+                    status = StepStatus.FAILED
+                    run.steps[n].error = f"{type(e).__name__}: {e}"
+                    run.steps[n].status = status
+                if status == StepStatus.FAILED:
+                    failed = True
+                    break               # pool __exit__ drains running steps
+                done.add(n)
+                if len(done) >= total:
                     break
-                done_futs, _ = cf.wait(list(inflight),
-                                       return_when=cf.FIRST_COMPLETED,
-                                       timeout=10.0)
-                for f in done_futs:
-                    n = inflight.pop(f)
-                    try:
-                        status = f.result()
-                    except Exception as e:  # noqa: BLE001
-                        status = StepStatus.FAILED
-                        run.steps[n].error = f"{type(e).__name__}: {e}"
-                        run.steps[n].status = status
-                    with lock:
-                        if status == StepStatus.FAILED:
-                            failed.set()
-                        else:
-                            done.add(n)
-        return not failed.is_set()
+                for s in run.workflow.successors(n):
+                    if s in indeg:
+                        indeg[s] -= 1
+                        if indeg[s] == 0:
+                            launch(s)
+                            inflight += 1
+        return not failed
 
     # ------------------------------------------------------------------
     def _exec_step(self, job: Job, run: WorkflowRun) -> StepStatus:
@@ -209,7 +232,9 @@ class LocalEngine(Engine):
             run.artifacts[out] = value
         # monitor feedback (App. B.B): measured duration refines the IR's
         # time estimate, which feeds Eq. 3's w_i on the next cache decision
+        # (weights_version keys the scorer's memo, so bump it)
         job.est_time_s = 0.5 * job.est_time_s + 0.5 * dur
+        run.workflow.note_weights_changed()
         if job.cacheable:
             self.cache.offer(key, value, compute_time_s=dur,
                              producer=job.name)
@@ -235,6 +260,27 @@ class LocalEngine(Engine):
                 rec.end = time.time()
                 raise
 
+    def _spec_pool_acquire(self) -> cf.ThreadPoolExecutor:
+        with self._spec_lock:
+            if self._spec_pools:
+                return self._spec_pools.pop()
+        return cf.ThreadPoolExecutor(max_workers=2,
+                                     thread_name_prefix="speculation")
+
+    def _spec_pool_release(self, pool: cf.ThreadPoolExecutor,
+                           busy: bool) -> None:
+        # A pool whose straggler is still running must NOT be reused (the
+        # next occupant's backup would queue behind it) nor joined (the
+        # backup already won); abandon it without waiting.
+        if busy:
+            pool.shutdown(wait=False)
+            return
+        with self._spec_lock:
+            if len(self._spec_pools) < 2 * self.max_workers:
+                self._spec_pools.append(pool)
+                return
+        pool.shutdown(wait=False)
+
     def _invoke(self, job: Job, run: WorkflowRun):
         if job.fn is None:
             return " ".join(job.command) or job.name   # container no-op
@@ -245,20 +291,24 @@ class LocalEngine(Engine):
             return job.fn(*args, **job.kwargs)
 
         # straggler mitigation: race a speculative copy if the primary
-        # exceeds straggler_factor x est_time_s. No context manager — we
-        # must NOT join the straggler thread once the backup won.
-        spec_pool = cf.ThreadPoolExecutor(max_workers=2)
+        # exceeds straggler_factor x est_time_s. Executors come from a
+        # persistent free-list (idle ones are reused across steps).
+        spec_pool = self._spec_pool_acquire()
+        futures: List[cf.Future] = []
         try:
             primary = spec_pool.submit(job.fn, *args, **job.kwargs)
+            futures.append(primary)
             budget_s = max(0.05, self.straggler_factor * job.est_time_s)
             try:
                 return primary.result(timeout=budget_s)
             except cf.TimeoutError:
                 backup = spec_pool.submit(job.fn, *args, **job.kwargs)
+                futures.append(backup)
                 done, _ = cf.wait([primary, backup],
                                   return_when=cf.FIRST_COMPLETED)
                 f = done.pop()
                 run.steps[job.name].speculative = True
                 return f.result()
         finally:
-            spec_pool.shutdown(wait=False)
+            self._spec_pool_release(
+                spec_pool, busy=any(not f.done() for f in futures))

@@ -4,12 +4,36 @@ A workflow is ``G = <J, E, C>`` — jobs, edges, configurations — engine- and
 platform-agnostic. All optimizers (caching §IV.A, auto-parallel split §IV.B)
 and all backend generators (Argo YAML, Airflow DAG, local/cluster executors)
 operate on this IR, which is what makes the programming interface unified.
+
+Adjacency & cache-invalidation contract
+---------------------------------------
+``WorkflowIR`` maintains indexed adjacency maps (``_preds``/``_succs``)
+incrementally so ``predecessors()``/``successors()`` are O(degree) instead
+of O(|E|) — these are the inner-loop primitives of every scheduler, cache
+scorer, and the auto-split DFS. Derived structure (topological order, the
+default-order adjacency matrix, the name→index map) is computed lazily and
+cached. The rules:
+
+* All structural mutation MUST go through ``add_job``/``add_edge`` (or the
+  constructors ``from_json``/``subgraph``). Direct writes to ``self.jobs``
+  or ``self.edges`` bypass the indices and are unsupported.
+* Every structural mutation bumps ``structure_version`` and drops the
+  cached topo order / adjacency matrix / index map.
+* Mutating *job attributes* (``est_time_s``, ``resources`` …) does not
+  change structure, so it does not touch the caches above — but consumers
+  that memoize attribute-dependent quantities (e.g. the cache scorer's
+  reconstruction cost, Eq. 3) key their memos on ``weights_version``;
+  engines that refine time estimates call ``note_weights_changed()``.
+* ``topo_order()``/``adjacency()`` return fresh copies; callers may mutate
+  the returned list/array freely.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -77,19 +101,58 @@ class Job:
 
 
 class WorkflowIR:
-    """DAG of jobs with artifact-labelled edges."""
+    """DAG of jobs with artifact-labelled edges (see module docstring for
+    the adjacency/invalidations contract)."""
 
     def __init__(self, name: str, configs: Optional[Dict] = None):
         self.name = name
         self.jobs: Dict[str, Job] = {}
         self.edges: Set[Tuple[str, str]] = set()
         self.configs: Dict[str, Any] = configs or {}
+        # incrementally maintained adjacency indices
+        self._preds: Dict[str, Set[str]] = {}
+        self._succs: Dict[str, Set[str]] = {}
+        # lazily computed derived structure, dropped on mutation
+        self._topo_cache: Optional[List[str]] = None
+        self._index_cache: Optional[Dict[str, int]] = None
+        self._adj_cache: Optional[np.ndarray] = None
+        self._struct_version = 0
+        self._weights_version = 0
+        self._weights_counter = itertools.count(1)
+
+    # -- versioning --------------------------------------------------------
+    @property
+    def structure_version(self) -> int:
+        """Bumped on every add_job/add_edge; keys structural memos."""
+        return self._struct_version
+
+    @property
+    def weights_version(self) -> int:
+        """Bumped via note_weights_changed(); keys attribute-dependent
+        memos (est_time_s feeds Eq. 3's w_i)."""
+        return self._weights_version
+
+    def note_weights_changed(self) -> None:
+        # engines call this from pool worker threads; next() on the shared
+        # counter is atomic, so concurrent bumps never collapse into one
+        # observable value (a plain += could lose an update and leave
+        # memo consumers serving stale Eq. 3 costs)
+        self._weights_version = next(self._weights_counter)
+
+    def _invalidate(self) -> None:
+        self._struct_version += 1
+        self._topo_cache = None
+        self._index_cache = None
+        self._adj_cache = None
 
     # -- construction ------------------------------------------------------
     def add_job(self, job: Job) -> Job:
         if job.name in self.jobs:
             return self.jobs[job.name]          # idempotent (paper's dag())
         self.jobs[job.name] = job
+        self._preds[job.name] = set()
+        self._succs[job.name] = set()
+        self._invalidate()
         return job
 
     def add_edge(self, src: str, dst: str) -> None:
@@ -97,7 +160,12 @@ class WorkflowIR:
             raise KeyError(f"edge references unknown job: {src}->{dst}")
         if src == dst:
             raise ValueError(f"self-edge on {src}")
+        if (src, dst) in self.edges:
+            return                              # idempotent, keep caches
         self.edges.add((src, dst))
+        self._succs[src].add(dst)
+        self._preds[dst].add(src)
+        self._invalidate()
 
     # -- structure ---------------------------------------------------------
     @property
@@ -105,18 +173,41 @@ class WorkflowIR:
         return list(self.jobs)
 
     def predecessors(self, name: str) -> List[str]:
-        return [s for (s, d) in self.edges if d == name]
+        return list(self._preds.get(name, ()))
 
     def successors(self, name: str) -> List[str]:
-        return [d for (s, d) in self.edges if s == name]
+        return list(self._succs.get(name, ()))
+
+    def in_degree(self, name: str) -> int:
+        return len(self._preds.get(name, ()))
+
+    def out_degree(self, name: str) -> int:
+        return len(self._succs.get(name, ()))
+
+    def node_index(self) -> Dict[str, int]:
+        """name -> position in job insertion order (cached)."""
+        if self._index_cache is None:
+            self._index_cache = {n: i for i, n in enumerate(self.jobs)}
+        return self._index_cache
 
     def adjacency(self, order: Optional[Sequence[str]] = None) -> np.ndarray:
-        order = list(order or self.jobs)
+        if order is None:
+            if self._adj_cache is None:
+                self._adj_cache = self._build_adjacency(list(self.jobs))
+            return self._adj_cache.copy()
+        return self._build_adjacency(list(order))
+
+    def _build_adjacency(self, order: List[str]) -> np.ndarray:
         idx = {n: i for i, n in enumerate(order)}
         A = np.zeros((len(order), len(order)), dtype=np.float64)
-        for s, d in self.edges:
-            if s in idx and d in idx:
-                A[idx[s], idx[d]] = 1.0
+        for s in order:
+            i = idx.get(s)
+            if i is None:
+                continue
+            for d in self._succs.get(s, ()):
+                j = idx.get(d)
+                if j is not None:
+                    A[i, j] = 1.0
         return A
 
     def degrees(self, order: Optional[Sequence[str]] = None) -> np.ndarray:
@@ -124,21 +215,22 @@ class WorkflowIR:
         return A.sum(0) + A.sum(1)
 
     def topo_order(self) -> List[str]:
-        indeg = {n: 0 for n in self.jobs}
-        for _, d in self.edges:
-            indeg[d] += 1
-        ready = sorted(n for n, k in indeg.items() if k == 0)
-        out = []
+        if self._topo_cache is not None:
+            return list(self._topo_cache)
+        indeg = {n: len(self._preds[n]) for n in self.jobs}
+        ready = deque(sorted(n for n, k in indeg.items() if k == 0))
+        out: List[str] = []
         while ready:
-            n = ready.pop(0)
+            n = ready.popleft()
             out.append(n)
-            for d in sorted(self.successors(n)):
+            for d in sorted(self._succs[n]):
                 indeg[d] -= 1
                 if indeg[d] == 0:
                     ready.append(d)
         if len(out) != len(self.jobs):
             raise ValueError(f"workflow {self.name} contains a cycle")
-        return out
+        self._topo_cache = out
+        return list(out)
 
     def validate(self) -> None:
         self.topo_order()
@@ -150,9 +242,8 @@ class WorkflowIR:
         finish: Dict[str, float] = {}
         parent: Dict[str, Optional[str]] = {}
         for n in self.topo_order():
-            preds = self.predecessors(n)
             base, p = 0.0, None
-            for q in preds:
+            for q in self._preds[n]:
                 if finish[q] > base:
                     base, p = finish[q], q
             finish[n] = base + self.jobs[n].est_time_s
@@ -170,8 +261,7 @@ class WorkflowIR:
         Approximated by levels of the topological order."""
         level: Dict[str, int] = {}
         for n in self.topo_order():
-            preds = self.predecessors(n)
-            level[n] = 1 + max((level[p] for p in preds), default=-1)
+            level[n] = 1 + max((level[p] for p in self._preds[n]), default=-1)
         by_level: Dict[int, float] = {}
         for n, l in level.items():
             by_level[l] = by_level.get(l, 0.0) + self.jobs[n].est_mem_bytes
@@ -188,10 +278,11 @@ class WorkflowIR:
         sub = WorkflowIR(name, dict(self.configs))
         keep = set(names)
         for n in names:
-            sub.jobs[n] = self.jobs[n]
-        for s, d in self.edges:
-            if s in keep and d in keep:
-                sub.edges.add((s, d))
+            sub.add_job(self.jobs[n])           # shares Job objects
+        for n in names:
+            for d in self._succs.get(n, ()):
+                if d in keep:
+                    sub.add_edge(n, d)
         return sub
 
     # -- serialization -----------------------------------------------------

@@ -26,7 +26,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.sharding.compat import shard_map
 
 from repro.models import layers as L
 from repro.sharding.ctx import axis_ctx, current_strategy, shard

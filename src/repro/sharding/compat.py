@@ -1,0 +1,28 @@
+"""Version-tolerant ``shard_map`` import.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` (0.4.x) to the
+top-level ``jax`` namespace (>= 0.5) and renamed the replication-check kwarg
+``check_rep`` -> ``check_vma`` along the way. Import ``shard_map`` from here
+and use either kwarg; the shim translates to whatever the installed jax
+accepts.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # jax >= 0.5 exposes it top-level
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(*args, **kwargs):
+    if _HAS_VMA:
+        if "check_rep" in kwargs:
+            kwargs["check_vma"] = kwargs.pop("check_rep")
+    else:
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)

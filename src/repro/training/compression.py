@@ -22,7 +22,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.sharding.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 

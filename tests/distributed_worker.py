@@ -120,7 +120,7 @@ def check_moe_a2a_matches_local():
 def check_compressed_psum():
     from repro.launch.mesh import make_mesh
     from repro.training.compression import compressed_psum_mean
-    from jax import shard_map
+    from repro.sharding.compat import shard_map
     mesh = make_mesh((8,), ("data",))
     g = jax.random.normal(jax.random.PRNGKey(0), (8, 1000))
 
@@ -141,7 +141,7 @@ def check_compression_wire_bytes():
     from repro.launch.mesh import make_mesh
     from repro.roofline.analysis import analyze_hlo
     from repro.training.compression import compressed_psum_mean
-    from jax import shard_map
+    from repro.sharding.compat import shard_map
     mesh = make_mesh((8,), ("data",))
     n = 1 << 16
 

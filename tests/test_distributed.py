@@ -9,6 +9,7 @@ import pytest
 HERE = os.path.dirname(__file__)
 
 
+@pytest.mark.slow          # multi-minute subprocess suite; not tier-1
 @pytest.mark.timeout(900)
 def test_distributed_suite():
     r = subprocess.run(

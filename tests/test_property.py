@@ -1,7 +1,10 @@
 """Hypothesis property tests on system invariants."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st           # noqa: E402
+from hypothesis import given, settings       # noqa: E402
 
 from repro.core.autosplit import Budget, split_workflow, validate_split
 from repro.core.caching import (CacheStore, CoulerPolicy, FIFOPolicy,

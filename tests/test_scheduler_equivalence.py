@@ -1,0 +1,327 @@
+"""Equivalence tests for the hot-path scheduler/cache refactor.
+
+The event-driven schedulers must be *behaviorally identical* to the
+pre-refactor reference implementations — same completion sets, same
+simulated metrics, same admission decisions — on seeded random DAGs. The
+reference multi-cluster scheduler below is a faithful copy of the old
+O(events·V·E) full-rescan algorithm (predecessors via edge scans,
+``launch_ready`` over every job of every active workflow per event).
+"""
+import heapq
+import itertools
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core.caching import CacheStore, CoulerPolicy
+from repro.core.engines.base import StepRecord, StepStatus, WorkflowRun
+from repro.core.engines.cluster import Cluster, MultiClusterEngine, UserQuota
+from repro.core.engines.local import LocalEngine
+from repro.core.ir import Job, Resources, WorkflowIR
+
+
+# ---------------------------------------------------------------------------
+# seeded random DAGs
+# ---------------------------------------------------------------------------
+
+def random_dag(rng: random.Random, name: str, n_min=3, n_max=14,
+               p_edge=0.3, gpu_frac=0.15) -> WorkflowIR:
+    wf = WorkflowIR(name)
+    n = rng.randint(n_min, n_max)
+    for i in range(n):
+        gpu = 1.0 if rng.random() < gpu_frac else 0.0
+        wf.add_job(Job(name=f"j{i}",
+                       est_time_s=round(rng.uniform(1, 50), 3),
+                       resources=Resources(cpu=rng.choice([1, 2, 4, 8]),
+                                           gpu=gpu)))
+    for j in range(1, n):
+        for i in range(j):
+            if rng.random() < p_edge:
+                wf.add_edge(f"j{i}", f"j{j}")
+    return wf
+
+
+# ---------------------------------------------------------------------------
+# reference (pre-refactor) multi-cluster scheduler
+# ---------------------------------------------------------------------------
+
+def reference_submit_many(clusters, workflows):
+    """Verbatim port of the old full-rescan submit_many. Returns
+    (runs, metrics)."""
+    seq = itertools.count()
+    quotas = {}
+    metrics = {"scheduled_jobs": 0, "completed_workflows": 0,
+               "failed_admission": 0, "makespan_s": 0.0,
+               "cluster_busy_s": {c.name: 0.0 for c in clusters}}
+
+    def quota(user):
+        if user not in quotas:
+            quotas[user] = UserQuota()
+        return quotas[user]
+
+    def pick_cluster(job):
+        cands = [c for c in clusters if c.fits(job)]
+        if job.resources.gpu > 0:
+            cands = [c for c in cands if c.gpu > 0]
+        if not cands:
+            return None
+        return min(cands, key=lambda c: c.load())
+
+    queue = []
+    for wf, user, prio in workflows:
+        wf.validate()
+        heapq.heappush(queue, ((-prio, next(seq)), wf, user))
+    runs, active, events = {}, [], []
+    now = 0.0
+
+    while queue:
+        _, wf, user = heapq.heappop(queue)
+        st = {"wf": wf, "user": user,
+              "indeg": {n: len([s for (s, d) in wf.edges if d == n])
+                        for n in wf.jobs},
+              "remaining": len(wf.jobs), "run": WorkflowRun(workflow=wf)}
+        for n in wf.jobs:
+            st["run"].steps[n] = StepRecord()
+        active.append(st)
+        runs[wf.name] = st["run"]
+
+    def launch_ready():
+        for st in active:
+            wf = st["wf"]
+            for n, k in list(st["indeg"].items()):
+                if k != 0 or st["run"].steps[n].status != StepStatus.PENDING:
+                    continue
+                job = wf.jobs[n]
+                q = quota(st["user"])
+                if not q.fits(job):
+                    continue
+                c = pick_cluster(job)
+                if c is None:
+                    metrics["failed_admission"] += 1
+                    continue
+                r = job.resources
+                c.used_cpu += r.cpu
+                c.used_mem += r.mem_bytes
+                c.used_gpu += r.gpu
+                q.used_cpu += r.cpu
+                q.used_mem += r.mem_bytes
+                q.used_gpu += r.gpu
+                st["run"].steps[n].status = StepStatus.RUNNING
+                st["run"].steps[n].start = now
+                metrics["scheduled_jobs"] += 1
+                heapq.heappush(events, (now + job.est_time_s, next(seq),
+                                        c, st["user"], id(st), st, n))
+
+    launch_ready()
+    while events:
+        now, _, c, user, _, st, n = heapq.heappop(events)
+        job = st["wf"].jobs[n]
+        r = job.resources
+        c.used_cpu -= r.cpu
+        c.used_mem -= r.mem_bytes
+        c.used_gpu -= r.gpu
+        q = quota(user)
+        q.used_cpu -= r.cpu
+        q.used_mem -= r.mem_bytes
+        q.used_gpu -= r.gpu
+        metrics["cluster_busy_s"][c.name] += job.est_time_s * r.cpu
+        st["run"].steps[n].status = StepStatus.SUCCEEDED
+        st["run"].steps[n].end = now
+        st["remaining"] -= 1
+        for s2 in [d for (s, d) in st["wf"].edges if s == n]:
+            st["indeg"][s2] -= 1
+        if st["remaining"] == 0:
+            st["run"].status = "Succeeded"
+            st["run"].wall_time_s = now
+            metrics["completed_workflows"] += 1
+        launch_ready()
+    metrics["makespan_s"] = now
+    return runs, metrics
+
+
+def _clusters(tight=False):
+    if tight:
+        return [Cluster("gpu", cpu=12, mem_bytes=1 << 40, gpu=2),
+                Cluster("cpu-a", cpu=16, mem_bytes=1 << 40),
+                Cluster("cpu-b", cpu=10, mem_bytes=1 << 40)]
+    return [Cluster("gpu", cpu=256, mem_bytes=1 << 50, gpu=32),
+            Cluster("cpu-a", cpu=1024, mem_bytes=1 << 50),
+            Cluster("cpu-b", cpu=1024, mem_bytes=1 << 50)]
+
+
+@pytest.mark.parametrize("seed,tight", [(0, False), (1, False), (2, True),
+                                        (3, True), (4, True)])
+def test_submit_many_matches_reference(seed, tight):
+    """Makespan, scheduled_jobs, busy time, per-step times, and completion
+    sets must be identical to the pre-refactor full-rescan scheduler —
+    including under tight cluster capacity and user quotas (the blocked
+    retry paths) and GPU-only routing."""
+    rng = random.Random(seed)
+    batch1 = [(random_dag(rng, f"wf-{i}"), f"u{i % 3}", rng.randint(0, 2))
+              for i in range(12)]
+    rng = random.Random(seed)        # identical DAGs for the reference
+    batch2 = [(random_dag(rng, f"wf-{i}"), f"u{i % 3}", rng.randint(0, 2))
+              for i in range(12)]
+
+    eng = MultiClusterEngine(clusters=_clusters(tight))
+    runs = eng.submit_many(batch1)
+    ref_runs, ref_metrics = reference_submit_many(_clusters(tight), batch2)
+
+    assert eng.metrics["makespan_s"] == ref_metrics["makespan_s"]
+    assert eng.metrics["scheduled_jobs"] == ref_metrics["scheduled_jobs"]
+    assert eng.metrics["completed_workflows"] == \
+        ref_metrics["completed_workflows"]
+    assert eng.metrics["failed_admission"] == ref_metrics["failed_admission"]
+    assert eng.metrics["cluster_busy_s"] == ref_metrics["cluster_busy_s"]
+    assert set(runs) == set(ref_runs)
+    for name, run in runs.items():
+        ref = ref_runs[name]
+        assert run.status == ref.status, name
+        # identical completion sets AND identical per-step schedule times
+        for n, rec in run.steps.items():
+            rref = ref.steps[n]
+            assert rec.status == rref.status, (name, n)
+            assert rec.start == rref.start, (name, n)
+            assert rec.end == rref.end, (name, n)
+
+
+def test_submit_many_quota_starvation_matches_reference():
+    """A job larger than its user's entire quota never launches; everything
+    else must still complete exactly as in the reference."""
+    wf = WorkflowIR("starve")
+    wf.add_job(Job(name="huge", est_time_s=5.0,
+                   resources=Resources(cpu=1000.0)))
+    wf.add_job(Job(name="ok", est_time_s=2.0, resources=Resources(cpu=2.0)))
+    wf2 = WorkflowIR("starve")
+    wf2.add_job(Job(name="huge", est_time_s=5.0,
+                    resources=Resources(cpu=1000.0)))
+    wf2.add_job(Job(name="ok", est_time_s=2.0, resources=Resources(cpu=2.0)))
+
+    eng = MultiClusterEngine(clusters=[
+        Cluster("big", cpu=4096, mem_bytes=1 << 50)])
+    run = eng.submit_many([(wf, "u0", 0)])["starve"]
+    ref_runs, ref_metrics = reference_submit_many(
+        [Cluster("big", cpu=4096, mem_bytes=1 << 50)], [(wf2, "u0", 0)])
+    ref = ref_runs["starve"]
+    assert run.steps["huge"].status == ref.steps["huge"].status \
+        == StepStatus.PENDING
+    assert run.steps["ok"].status == ref.steps["ok"].status \
+        == StepStatus.SUCCEEDED
+    assert eng.metrics["makespan_s"] == ref_metrics["makespan_s"]
+    assert eng.metrics["scheduled_jobs"] == ref_metrics["scheduled_jobs"]
+
+
+# ---------------------------------------------------------------------------
+# local engine: completion sets + per-step ordering constraints
+# ---------------------------------------------------------------------------
+
+def test_local_engine_respects_dag_order_on_random_dags():
+    """Push-based scheduling must run every job exactly once and never
+    start a job before all its predecessors finished."""
+    for seed in range(4):
+        rng = random.Random(100 + seed)
+        wf = WorkflowIR(f"loc-{seed}")
+        n = rng.randint(5, 18)
+        spans = {}
+        lock = threading.Lock()
+
+        def mk(name):
+            def fn(*a):
+                t0 = time.monotonic()
+                time.sleep(rng.uniform(0.001, 0.004))
+                with lock:
+                    spans[name] = (t0, time.monotonic())
+                return name
+            return fn
+
+        for i in range(n):
+            wf.add_job(Job(name=f"j{i}", fn=mk(f"j{i}"), cacheable=False,
+                           outputs=[f"j{i}:out"]))
+        for j in range(1, n):
+            for i in range(j):
+                if rng.random() < 0.35:
+                    wf.add_edge(f"j{i}", f"j{j}")
+
+        eng = LocalEngine(max_workers=4, enable_speculation=False)
+        run = eng.submit(wf, optimize=False)
+        assert run.succeeded()
+        assert set(spans) == set(wf.jobs)                 # each ran once
+        statuses = {n_: r.status for n_, r in run.steps.items()}
+        assert all(s == StepStatus.SUCCEEDED for s in statuses.values())
+        for (u, v) in wf.edges:                           # ordering constraint
+            assert spans[u][1] <= spans[v][0], (u, v)
+
+
+def test_local_engine_failure_stops_descendants():
+    wf = WorkflowIR("fail")
+    ran = []
+    wf.add_job(Job(name="a", fn=lambda: ran.append("a") or 1,
+                   cacheable=False, outputs=["a:out"]))
+    wf.add_job(Job(name="b", fn=lambda: (_ for _ in ()).throw(
+        ValueError("boom")), cacheable=False, retry_limit=0))
+    wf.add_job(Job(name="c", fn=lambda: ran.append("c") or 3,
+                   cacheable=False))
+    wf.add_edge("a", "b")
+    wf.add_edge("b", "c")
+    run = LocalEngine(enable_speculation=False).submit(wf, optimize=False)
+    assert not run.succeeded()
+    assert run.steps["b"].status == StepStatus.FAILED
+    assert run.steps["c"].status == StepStatus.PENDING    # never launched
+    assert "c" not in ran
+
+
+# ---------------------------------------------------------------------------
+# cache scoring memo invalidation
+# ---------------------------------------------------------------------------
+
+def _fan(name, fanout):
+    wf = WorkflowIR(name)
+    wf.add_job(Job(name="root", est_time_s=5))
+    wf.add_job(Job(name="mid", est_time_s=3))
+    wf.add_edge("root", "mid")
+    for i in range(fanout):
+        wf.add_job(Job(name=f"leaf{i}", est_time_s=1))
+        wf.add_edge("mid", f"leaf{i}")
+    return wf
+
+
+def test_memo_invalidated_across_attach_workflow():
+    """The Eq.3/4 memo must not leak scores across differently-structured
+    workflows attached to the same store."""
+    pol = CoulerPolicy()
+    store = CacheStore(capacity_bytes=1000, policy=pol)
+    store.offer("mid:out", b"x" * 10, 1.0, producer="mid")
+    art = store.items["mid:out"]
+
+    store.attach_workflow(_fan("w1", 6))
+    high = pol.score(art, store)
+    store.attach_workflow(_fan("w2", 1))   # same names, much lower fan-out
+    low = pol.score(art, store)
+    assert low < high
+    # re-attaching the high-fanout structure recovers the high score
+    store.attach_workflow(_fan("w3", 6))
+    assert pol.score(art, store) == high
+
+
+def test_memo_invalidated_by_structure_and_weights_mutation():
+    pol = CoulerPolicy()
+    store = CacheStore(capacity_bytes=1000, policy=pol)
+    store.offer("mid:out", b"x" * 10, 1.0, producer="mid")
+    art = store.items["mid:out"]
+    wf = _fan("w", 2)
+    store.attach_workflow(wf)
+    s0 = pol.score(art, store)
+
+    # structural mutation (add a consumer) must be visible immediately
+    wf.add_job(Job(name="extra", est_time_s=1))
+    wf.add_edge("mid", "extra")
+    s1 = pol.score(art, store)
+    assert s1 > s0
+
+    # est_time_s refinement + note_weights_changed must drop Eq.3 memos
+    wf.jobs["root"].est_time_s *= 100
+    wf.note_weights_changed()
+    s2 = pol.score(art, store)
+    assert s2 > s1
