@@ -30,6 +30,13 @@ SUITES = [
      lambda rows: "hit_ratio_range=%.2f-%.2f" % (
          min(r["hit_ratio"] for r in rows),
          max(r["hit_ratio"] for r in rows))),
+    ("cache_tiers", "benchmarks.bench_tiers", {"scale": 0.4},
+     lambda rows: "three_tier_beats_both_baselines=" + str(
+         [r["sim_makespan_s"] for r in rows
+          if r["scenario"] == "multimodal" and r["config"] == "three_tier"][0]
+         < min(r["sim_makespan_s"] for r in rows
+               if r["scenario"] == "multimodal"
+               and r["config"] in ("mem_only", "unbounded_single")))),
     ("nl2wf_tableII", "benchmarks.bench_nl2wf", {"n_seeds": 2},
      lambda rows: "gpt4_ours_pass@5=" + str(
          [r for r in rows if r.get("model") == "gpt-4+ours"][0]["pass@5"])),

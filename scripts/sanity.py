@@ -1,4 +1,7 @@
-"""Quick CPU sanity loop: forward + train step on all reduced archs."""
+"""Quick CPU sanity loop: forward + train step on all reduced archs, plus
+a tier-consistency check of the cache subsystem (bytes conserved across
+demotions/promotions, capacity respected, no duplicate private copies)."""
+import random
 import sys
 import traceback
 
@@ -11,6 +14,50 @@ from repro.training import train as TR
 
 ok = True
 only = sys.argv[1:] or ARCH_IDS
+
+
+def cache_tier_sanity() -> bool:
+    """Randomized offer/get/promote traffic on a 3-tier store; the store's
+    check_invariants() asserts the per-tier byte ledgers balance."""
+    from repro.core.cache import (CacheTier, CoulerPolicy, TieredCacheStore,
+                                  mem_spec, remote_spec, ssd_spec)
+    from repro.core.ir import Job, WorkflowIR
+    wf = WorkflowIR("sanity")
+    wf.add_job(Job(name="root", est_time_s=2))
+    for i in range(4):
+        wf.add_job(Job(name=f"leaf{i}", est_time_s=1))
+        wf.add_edge("root", f"leaf{i}")
+    store = TieredCacheStore(
+        tiers=[CacheTier(mem_spec(500)), CacheTier(ssd_spec(1000)),
+               CacheTier(remote_spec(2000))],
+        policy=CoulerPolicy(), auto_promote_every=5)
+    store.attach_workflow(wf)
+    rng = random.Random(0)
+    try:
+        for i in range(400):
+            r = rng.random()
+            if r < 0.55:
+                store.offer(f"k{rng.randrange(16)}", None,
+                            rng.uniform(0.1, 3.0),
+                            producer=rng.choice(list(wf.jobs)),
+                            nbytes=rng.choice([40, 90, 180, 450, 1100]))
+            elif r < 0.9:
+                store.get(f"k{rng.randrange(16)}")
+            else:
+                store.promote()
+            if i % 40 == 0:
+                store.check_invariants()
+        store.check_invariants()
+    except AssertionError as e:
+        print(f"FAIL cache_tiers {e}")
+        return False
+    s = store.stats
+    print(f"OK   cache_tiers hits={s['hits']} demotions={s['demotions']} "
+          f"promotions={s['promotions']} evictions={s['evictions']}")
+    return True
+
+
+ok = cache_tier_sanity() and ok
 for aid in only:
     spec = get_arch(aid)
     cfg = reduced(spec.model).replace(param_dtype="float32",

@@ -1,0 +1,216 @@
+"""Cache admission/eviction policies (paper Algorithm 2 + RQ2 baselines).
+
+Baselines for the paper's RQ2 comparison: NONE, ALL, FIFO, LRU; the paper
+policy is ``CoulerPolicy`` (score = Eq. 6 importance factor).
+
+Policies are store-agnostic: ``score``/``score_many`` receive any object
+with the legacy ``CacheStore`` surface — ``items`` (name → CachedArtifact),
+``capacity_bytes`` and ``workflow`` — which is either a single-tier store
+or a per-tier view of a ``TieredCacheStore`` (tier capacity, store-wide
+contents so Eq. 3's cached frontier spans tiers).
+
+``promotion_scores`` is the background-promotion hook: the default reuses
+``score_many``, while ``CoulerPolicy`` extends Eq. 6 with the observed
+reuse events — each cache hit is one of Eq. 4's ``r`` events, so the
+re-rank uses (F(u) + uses)² in the beta term and hot artifacts climb back
+toward MEM even when their structural reuse value is modest.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.core.cache.scoring import (CachedArtifact, importance,
+                                      reconstruction_cost, reuse_value)
+from repro.core.ir import WorkflowIR
+
+
+class CachePolicy:
+    name = "base"
+
+    def admit(self, art: CachedArtifact) -> bool:
+        return True
+
+    def score(self, art: CachedArtifact, store) -> float:
+        raise NotImplementedError
+
+    def score_many(self, arts: Sequence[CachedArtifact],
+                   store) -> List[float]:
+        """Batch scoring hook; policies with shared per-batch state
+        (CoulerPolicy's frontier) override this."""
+        return [self.score(a, store) for a in arts]
+
+    def promotion_scores(self, arts: Sequence[CachedArtifact],
+                         store) -> List[float]:
+        """Ranking used by TieredCacheStore.promote(); defaults to the
+        eviction score (higher = keep closer to MEM)."""
+        return self.score_many(arts, store)
+
+    def invalidate(self, wf: Optional[WorkflowIR]) -> None:
+        """Called when the store's attached workflow changes."""
+
+
+class NoCache(CachePolicy):
+    name = "none"
+
+    def admit(self, art):
+        return False
+
+    def score(self, art, store):
+        return 0.0
+
+
+class CacheAll(CachePolicy):
+    """Admit everything; evict nothing until forced, then oldest-first."""
+    name = "all"
+
+    def score(self, art, store):
+        return -art.insertion        # forced eviction: oldest first
+
+    def promotion_scores(self, arts, store):
+        # oldest-first eviction, but promotion should still favor recency
+        return [a.last_used for a in arts]
+
+
+class FIFOPolicy(CachePolicy):
+    name = "fifo"
+
+    def score(self, art, store):
+        return art.insertion          # lowest = first in = evicted first
+
+
+class LRUPolicy(CachePolicy):
+    name = "lru"
+
+    def score(self, art, store):
+        return art.last_used
+
+
+class CoulerPolicy(CachePolicy):
+    """Paper Algorithm 2: score = caching importance factor I(u).
+
+    Eq. 3/4 are memoized per producer: F(u) depends only on workflow
+    structure, and L(u) additionally on est_time_s weights plus the part of
+    the cached frontier that falls inside u's untruncated n-layer
+    predecessor reach — so re-scoring after an unrelated eviction is a dict
+    lookup instead of a BFS + adjacency-matrix rebuild."""
+    name = "couler"
+
+    def __init__(self, alpha: float = 1.5, beta: float = 1.0,
+                 n_layers: int = 3, literal_eq4: bool = False):
+        self.alpha, self.beta, self.n_layers = alpha, beta, n_layers
+        self.literal_eq4 = literal_eq4
+        self._wf: Optional[WorkflowIR] = None       # strong ref (id safety)
+        self._struct_v = -1
+        self._weights_v = -1
+        self._pred_reach: Dict[str, FrozenSet[str]] = {}
+        self._reuse: Dict[str, float] = {}
+        self._recon: Dict[Tuple[str, FrozenSet[str]], float] = {}
+
+    def invalidate(self, wf: Optional[WorkflowIR]) -> None:
+        self._wf = None
+        self._struct_v = -1
+
+    def _sync(self, wf: WorkflowIR) -> None:
+        if wf is not self._wf or wf.structure_version != self._struct_v:
+            self._wf = wf
+            self._struct_v = wf.structure_version
+            self._weights_v = wf.weights_version
+            self._pred_reach.clear()
+            self._reuse.clear()
+            self._recon.clear()
+        elif wf.weights_version != self._weights_v:
+            self._weights_v = wf.weights_version
+            self._recon.clear()                      # Eq. 3 reads w_i
+
+    def _reach(self, wf: WorkflowIR, producer: str) -> FrozenSet[str]:
+        """Untruncated n-layer predecessor reach of `producer` — the only
+        nodes whose cached-status can alter Eq. 3's truncated BFS."""
+        s = self._pred_reach.get(producer)
+        if s is None:
+            frontier = [producer]
+            seen = {producer}
+            for _ in range(self.n_layers):
+                nxt = []
+                for j in frontier:
+                    for p in wf.predecessors(j):
+                        if p not in seen:
+                            seen.add(p)
+                            nxt.append(p)
+                frontier = nxt
+                if not frontier:
+                    break
+            s = frozenset(seen)
+            self._pred_reach[producer] = s
+        return s
+
+    # frontier-sig entries accumulate as the cached set churns even when
+    # the workflow never changes; past this bound a wholesale reset is
+    # cheaper than unbounded growth (misses just recompute)
+    _RECON_MEMO_CAP = 4096
+
+    def _lf(self, wf: WorkflowIR, art: CachedArtifact,
+            frontier_sig: FrozenSet[str]) -> Tuple[float, float]:
+        """Memoized (L(u), F(u)) for art's producer under the frontier."""
+        key = (art.producer, frontier_sig)
+        l = self._recon.get(key)
+        if l is None:
+            if len(self._recon) >= self._RECON_MEMO_CAP:
+                self._recon.clear()
+            l = reconstruction_cost(wf, art.producer, frontier_sig,
+                                    self.n_layers)
+            self._recon[key] = l
+        f = self._reuse.get(art.producer)
+        if f is None:
+            f = reuse_value(wf, art.producer, self.n_layers,
+                            literal_eq4=self.literal_eq4)
+            self._reuse[art.producer] = f
+        return l, f
+
+    def score(self, art: CachedArtifact, store) -> float:
+        return self.score_many([art], store)[0]
+
+    def _batch(self, arts: Sequence[CachedArtifact], store,
+               reuse_boost: bool) -> List[float]:
+        wf = store.workflow
+        if wf is None:
+            return [a.last_used for a in arts]
+        self._sync(wf)
+        prod_count: Dict[str, int] = {}
+        for a in store.items.values():
+            prod_count[a.producer] = prod_count.get(a.producer, 0) + 1
+        out = []
+        for art in arts:
+            if art.producer not in wf.jobs:
+                # orphaned producer (workflow edited since caching). For
+                # EVICTION keep the legacy LRU-style fallback; for the
+                # promotion re-rank a raw epoch timestamp would dwarf every
+                # Eq. 6 score and pin dead artifacts into MEM — rank
+                # orphans below everything so they sink instead
+                out.append(float("-inf") if reuse_boost else art.last_used)
+                continue
+            # cached frontier = producers of stored items minus the item
+            # stored under this artifact's own key (Algorithm 2's k != u),
+            # restricted to the predecessor reach (the rest cannot matter)
+            own = store.items.get(art.name)
+            own_producer = own.producer if own is not None else None
+            sig = frozenset(
+                p for p in self._reach(wf, art.producer)
+                if prod_count.get(p, 0) - (1 if p == own_producer else 0) > 0)
+            l, f = self._lf(wf, art, sig)
+            if reuse_boost:
+                f = f + art.uses       # observed hits are Eq. 4's r events
+            v = art.bytes / max(store.capacity_bytes, 1)
+            out.append(importance(l, f, v, self.alpha, self.beta))
+        return out
+
+    def score_many(self, arts: Sequence[CachedArtifact],
+                   store) -> List[float]:
+        return self._batch(arts, store, reuse_boost=False)
+
+    def promotion_scores(self, arts: Sequence[CachedArtifact],
+                         store) -> List[float]:
+        return self._batch(arts, store, reuse_boost=True)
+
+
+POLICIES = {"none": NoCache, "all": CacheAll, "fifo": FIFOPolicy,
+            "lru": LRUPolicy, "couler": CoulerPolicy}

@@ -1,479 +1,39 @@
-"""Automatic artifact caching (paper §IV.A, Eq. 3-6, Algorithm 2).
+"""Automatic artifact caching (paper §IV.A, Eq. 3-6, Algorithm 2) — facade.
 
-The *caching importance factor* of artifact u:
+The implementation lives in the ``repro.core.cache`` package:
 
-    I(u) = alpha * log(1 + L(u)) + beta * F(u)^2 - e^(-V(u))        (Eq. 6)
+  * Eq. 3-6 scoring (``cache/scoring.py``) — note ``reuse_value``'s
+    documented Eq. 4 choice: the default weights by |zeta_ui| so direct
+    successors count most; ``literal_eq4=True`` gives the equation exactly
+    as printed (which zeroes direct successors). See that module's
+    docstring; both behaviors are pinned by tests.
+  * Policies NONE/ALL/FIFO/LRU/COULER (``cache/policies.py``) with the
+    memoized Eq. 3/4 hot path described there.
+  * ``TieredCacheStore`` — MEM/SSD/REMOTE tiers, demotion cascade, Eq. 6
+    background promotion, cross-cluster ``SharedRemoteTier``
+    (``cache/tiers.py`` + ``cache/store.py``).
 
-  L(u)  reconstruction cost over the n-layer predecessor subgraph G_p,
-        truncated at already-cached artifacts:
-            L(u) = sum_ij A_ij * (w_i + d_i * d_j)                  (Eq. 3)
-  F(u)  reuse value over the successor subgraph G_s:
-            F(u) = sum_i r / kappa_ui * (zeta_ui + 1)               (Eq. 4)
-        with zeta = diag(d) - A (graph Laplacian)                   (Eq. 5)
-  V(u)  cache (memory) cost of u, normalized to the store capacity.
+``CacheStore`` here is the legacy single-tier API, now a facade over the
+tiered machinery: one MEM-like tier, so Algorithm 2 behaves exactly as the
+pre-tier implementation (engines call ``store.offer(...)`` when a job
+finishes and ``store.get(...)`` before running one; eviction re-scores
+remaining items through lazily invalidated heaps + policy memos).
 
-Baselines implemented for the paper's RQ2 comparison: NONE, ALL, FIFO, LRU.
-
-Capacity-bounded ``CacheStore`` + the Algorithm-2 exchange loop live here;
-engines call ``store.offer(...)`` when a job finishes and ``store.get(...)``
-before running one. Eviction re-scores remaining items after every removal
-(paper: "recompute the caching importance factor of all remaining items").
-
-Hot-path notes
---------------
-``CoulerPolicy`` memoizes Eq. 3/4 per (workflow identity + structure
-version [+ weights version for Eq. 3], producer, relevant cached frontier):
-the cached frontier only matters through its intersection with the
-producer's untruncated n-layer predecessor reach, so evictions elsewhere in
-the DAG hit the memo. Engines that refine ``est_time_s`` must call
-``WorkflowIR.note_weights_changed()`` so Eq. 3 memos are dropped (silent
-attribute mutation would otherwise serve stale reconstruction costs).
-``CacheStore`` keeps a lazily invalidated eviction min-heap: mutations only
-bump an epoch counter, and the heap is re-validated (through the policy
-memos, so unchanged items cost O(1)) the next time an eviction candidate is
-needed — replacing the former full Eq.3/4 re-derivation of every stored
-item on every eviction iteration.
+This module re-exports every public name so existing imports keep working.
 """
-from __future__ import annotations
-
-import heapq
-import math
-import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-from repro.core.ir import WorkflowIR
-
-
-def sizeof(value: Any) -> int:
-    try:
-        import numpy as _np
-        if isinstance(value, _np.ndarray):
-            return int(value.nbytes)
-    except Exception:
-        pass
-    if hasattr(value, "nbytes"):
-        try:
-            return int(value.nbytes)
-        except Exception:
-            pass
-    if isinstance(value, (bytes, bytearray, str)):
-        return len(value)
-    if isinstance(value, (list, tuple)):
-        return 64 + sum(sizeof(v) for v in value)
-    if isinstance(value, dict):
-        return 64 + sum(sizeof(k) + sizeof(v) for k, v in value.items())
-    return 64
-
-
-@dataclass
-class CachedArtifact:
-    name: str
-    value: Any
-    bytes: int
-    compute_time_s: float
-    producer: str                      # job name
-    created: float = field(default_factory=time.time)
-    last_used: float = field(default_factory=time.time)
-    uses: int = 0
-    insertion: int = 0                 # FIFO order
-
-
-# ---------------------------------------------------------------------------
-# Eq. 3-6
-# ---------------------------------------------------------------------------
-
-def predecessor_subgraph(wf: WorkflowIR, job: str, n_layers: int,
-                         cached_producers: set) -> List[str]:
-    """G_p: preceding n layers from u's producer; truncated at cached jobs
-    (paper §IV.A.2 properties (a),(b))."""
-    frontier = [job]
-    seen = {job}
-    for _ in range(n_layers):
-        nxt = []
-        for j in frontier:
-            for p in wf.predecessors(j):
-                if p in seen:
-                    continue
-                seen.add(p)
-                if p in cached_producers:
-                    continue            # truncate at cached artifact
-                nxt.append(p)
-        frontier = nxt
-        if not frontier:
-            break
-    return list(seen)
-
-
-def successor_subgraph(wf: WorkflowIR, job: str, n_layers: int) -> Dict[str, int]:
-    """G_s with hop distance kappa from u's producer."""
-    dist = {job: 0}
-    frontier = [job]
-    for k in range(1, n_layers + 1):
-        nxt = []
-        for j in frontier:
-            for s in wf.successors(j):
-                if s not in dist:
-                    dist[s] = k
-                    nxt.append(s)
-        frontier = nxt
-        if not frontier:
-            break
-    return dist
-
-
-def reconstruction_cost(wf: WorkflowIR, job: str, cached_producers: set,
-                        n_layers: int = 3) -> float:
-    """Eq. 3: L(u) = sum_ij A_ij (w_i + d_i d_j) over G_p."""
-    nodes = predecessor_subgraph(wf, job, n_layers, cached_producers)
-    A = wf.adjacency(nodes)
-    d = A.sum(0) + A.sum(1)
-    w = np.array([wf.jobs[n].est_time_s * max(1.0, wf.jobs[n].resources.cpu)
-                  for n in nodes])
-    # A_ij * (w_i + d_i*d_j), vectorized
-    cost = float((A * (w[:, None] + np.outer(d, d))).sum())
-    return cost
-
-
-def reuse_value(wf: WorkflowIR, job: str, n_layers: int = 3) -> float:
-    """Eq. 4/5: F(u) = sum_i r/kappa_ui * (zeta_ui + 1), zeta = diag(d) - A."""
-    dist = successor_subgraph(wf, job, n_layers)
-    nodes = list(dist)
-    if len(nodes) <= 1:
-        return 0.0
-    A = wf.adjacency(nodes)
-    d = A.sum(0) + A.sum(1)
-    zeta = np.diag(d) - A
-    # NOTE: taken literally, zeta_ui = -A_ui makes every DIRECT successor
-    # contribute (zeta+1) = 0, which contradicts Eq. 4's stated intent (F
-    # measures the value of reuse by successors). We keep the Laplacian
-    # structure but weight by |zeta_ui| so direct dependents count most.
-    u = nodes.index(job)
-    total = 0.0
-    for i, n in enumerate(nodes):
-        if n == job:
-            continue
-        kappa = dist[n]
-        r = 1.0                           # reuse event indicator
-        total += (r / max(kappa, 1)) * (abs(zeta[u, i]) + 1.0)
-    return float(total)
-
-
-def importance(l: float, f: float, v: float, alpha: float = 1.5,
-               beta: float = 1.0) -> float:
-    """Eq. 6 (alpha=1.5, beta=1 per paper §VI.C)."""
-    return alpha * math.log1p(max(l, 0.0)) + beta * f * f - math.exp(-v)
-
-
-# ---------------------------------------------------------------------------
-# policies
-# ---------------------------------------------------------------------------
-
-class CachePolicy:
-    name = "base"
-
-    def admit(self, art: CachedArtifact) -> bool:
-        return True
-
-    def score(self, art: CachedArtifact, store: "CacheStore") -> float:
-        raise NotImplementedError
-
-    def score_many(self, arts: Sequence[CachedArtifact],
-                   store: "CacheStore") -> List[float]:
-        """Batch scoring hook; policies with shared per-batch state
-        (CoulerPolicy's frontier) override this."""
-        return [self.score(a, store) for a in arts]
-
-    def invalidate(self, wf: Optional[WorkflowIR]) -> None:
-        """Called when the store's attached workflow changes."""
-
-
-class NoCache(CachePolicy):
-    name = "none"
-
-    def admit(self, art):
-        return False
-
-    def score(self, art, store):
-        return 0.0
-
-
-class CacheAll(CachePolicy):
-    """Admit everything; evict nothing until forced, then oldest-first."""
-    name = "all"
-
-    def score(self, art, store):
-        return -art.insertion        # forced eviction: oldest first
-
-
-class FIFOPolicy(CachePolicy):
-    name = "fifo"
-
-    def score(self, art, store):
-        return art.insertion          # lowest = first in = evicted first
-
-
-class LRUPolicy(CachePolicy):
-    name = "lru"
-
-    def score(self, art, store):
-        return art.last_used
-
-
-class CoulerPolicy(CachePolicy):
-    """Paper Algorithm 2: score = caching importance factor I(u).
-
-    Eq. 3/4 are memoized per producer: F(u) depends only on workflow
-    structure, and L(u) additionally on est_time_s weights plus the part of
-    the cached frontier that falls inside u's untruncated n-layer
-    predecessor reach — so re-scoring after an unrelated eviction is a dict
-    lookup instead of a BFS + adjacency-matrix rebuild."""
-    name = "couler"
-
-    def __init__(self, alpha: float = 1.5, beta: float = 1.0,
-                 n_layers: int = 3):
-        self.alpha, self.beta, self.n_layers = alpha, beta, n_layers
-        self._wf: Optional[WorkflowIR] = None       # strong ref (id safety)
-        self._struct_v = -1
-        self._weights_v = -1
-        self._pred_reach: Dict[str, FrozenSet[str]] = {}
-        self._reuse: Dict[str, float] = {}
-        self._recon: Dict[Tuple[str, FrozenSet[str]], float] = {}
-
-    def invalidate(self, wf: Optional[WorkflowIR]) -> None:
-        self._wf = None
-        self._struct_v = -1
-
-    def _sync(self, wf: WorkflowIR) -> None:
-        if wf is not self._wf or wf.structure_version != self._struct_v:
-            self._wf = wf
-            self._struct_v = wf.structure_version
-            self._weights_v = wf.weights_version
-            self._pred_reach.clear()
-            self._reuse.clear()
-            self._recon.clear()
-        elif wf.weights_version != self._weights_v:
-            self._weights_v = wf.weights_version
-            self._recon.clear()                      # Eq. 3 reads w_i
-
-    def _reach(self, wf: WorkflowIR, producer: str) -> FrozenSet[str]:
-        """Untruncated n-layer predecessor reach of `producer` — the only
-        nodes whose cached-status can alter Eq. 3's truncated BFS."""
-        s = self._pred_reach.get(producer)
-        if s is None:
-            frontier = [producer]
-            seen = {producer}
-            for _ in range(self.n_layers):
-                nxt = []
-                for j in frontier:
-                    for p in wf.predecessors(j):
-                        if p not in seen:
-                            seen.add(p)
-                            nxt.append(p)
-                frontier = nxt
-                if not frontier:
-                    break
-            s = frozenset(seen)
-            self._pred_reach[producer] = s
-        return s
-
-    # frontier-sig entries accumulate as the cached set churns even when
-    # the workflow never changes; past this bound a wholesale reset is
-    # cheaper than unbounded growth (misses just recompute)
-    _RECON_MEMO_CAP = 4096
-
-    def _importance(self, wf: WorkflowIR, art: CachedArtifact,
-                    frontier_sig: FrozenSet[str],
-                    capacity_bytes: int) -> float:
-        key = (art.producer, frontier_sig)
-        l = self._recon.get(key)
-        if l is None:
-            if len(self._recon) >= self._RECON_MEMO_CAP:
-                self._recon.clear()
-            l = reconstruction_cost(wf, art.producer, frontier_sig,
-                                    self.n_layers)
-            self._recon[key] = l
-        f = self._reuse.get(art.producer)
-        if f is None:
-            f = reuse_value(wf, art.producer, self.n_layers)
-            self._reuse[art.producer] = f
-        v = art.bytes / max(capacity_bytes, 1)
-        return importance(l, f, v, self.alpha, self.beta)
-
-    def score(self, art: CachedArtifact, store: "CacheStore") -> float:
-        return self.score_many([art], store)[0]
-
-    def score_many(self, arts: Sequence[CachedArtifact],
-                   store: "CacheStore") -> List[float]:
-        wf = store.workflow
-        if wf is None:
-            return [a.last_used for a in arts]
-        self._sync(wf)
-        prod_count: Dict[str, int] = {}
-        for a in store.items.values():
-            prod_count[a.producer] = prod_count.get(a.producer, 0) + 1
-        out = []
-        for art in arts:
-            if art.producer not in wf.jobs:
-                out.append(art.last_used)
-                continue
-            # cached frontier = producers of stored items minus the item
-            # stored under this artifact's own key (Algorithm 2's k != u),
-            # restricted to the predecessor reach (the rest cannot matter)
-            own = store.items.get(art.name)
-            own_producer = own.producer if own is not None else None
-            sig = frozenset(
-                p for p in self._reach(wf, art.producer)
-                if prod_count.get(p, 0) - (1 if p == own_producer else 0) > 0)
-            out.append(self._importance(wf, art, sig, store.capacity_bytes))
-        return out
-
-
-POLICIES = {"none": NoCache, "all": CacheAll, "fifo": FIFOPolicy,
-            "lru": LRUPolicy, "couler": CoulerPolicy}
-
-
-# ---------------------------------------------------------------------------
-# store + Algorithm 2
-# ---------------------------------------------------------------------------
-
-class CacheStore:
-    """Capacity-bounded artifact store (models the Alluxio tier, §IV.A.1).
-
-    Eviction candidates come from a lazily invalidated min-heap of
-    (score, insertion, name): any state change that may move a score
-    (insert/evict/refresh, a cache hit touching ``last_used``, or the
-    attached workflow's structure/weights versions advancing) only bumps
-    ``_epoch``; the heap is rebuilt — through the policy memos, so
-    unchanged items are dict lookups — the next time a candidate is
-    actually needed. ``stats['score_time_s']`` accumulates the wall time
-    spent inside policy scoring."""
-
-    def __init__(self, capacity_bytes: int = 1 << 30,
-                 policy: Optional[CachePolicy] = None):
-        import threading
-        self.capacity_bytes = capacity_bytes
-        self.policy = policy or CoulerPolicy()
-        self.items: Dict[str, CachedArtifact] = {}
-        self.used_bytes = 0
-        self.workflow: Optional[WorkflowIR] = None
-        self._insertions = 0
-        self._lock = threading.RLock()      # engines offer() from workers
-        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
-                      "admitted": 0, "rejected": 0, "refreshed": 0,
-                      "score_time_s": 0.0}
-        self._epoch = 0                     # bumped on score-moving changes
-        self._heap: List[Tuple[float, int, str]] = []
-        self._heap_epoch = -1
-        self._wf_versions: Optional[Tuple[int, int]] = None
-
-    def attach_workflow(self, wf: WorkflowIR) -> None:
-        with self._lock:
-            if wf is not self.workflow:
-                self.workflow = wf
-                self.policy.invalidate(wf)
-                self._epoch += 1
-
-    def get(self, name: str) -> Optional[CachedArtifact]:
-        with self._lock:
-            art = self.items.get(name)
-            if art is None:
-                self.stats["misses"] += 1
-                return None
-            art.last_used = time.time()
-            art.uses += 1
-            self.stats["hits"] += 1
-            self._epoch += 1                # last_used moved (LRU scores)
-            return art
-
-    def contains(self, name: str) -> bool:
-        return name in self.items
-
-    def offer(self, name: str, value: Any, compute_time_s: float,
-              producer: str, nbytes: Optional[int] = None) -> bool:
-        """Algorithm 2: try to admit a newly produced artifact, evicting
-        lower-importance items while capacity is exceeded."""
-        b = nbytes if nbytes is not None else sizeof(value)
-        with self._lock:
-            art = CachedArtifact(name=name, value=value, bytes=b,
-                                 compute_time_s=compute_time_s,
-                                 producer=producer, insertion=self._insertions)
-            self._insertions += 1
-
-            if not self.policy.admit(art):
-                self.stats["rejected"] += 1
-                return False
-            if b > self.capacity_bytes:
-                self.stats["rejected"] += 1
-                return False
-
-            # lines 10-11: fits -> cache it
-            if self.used_bytes + b <= self.capacity_bytes:
-                self._insert(art)
-                return True
-
-            # lines 16-31 (NodeSelection): compare vs lowest-scored items
-            self._sync_workflow_versions()
-            t0 = time.perf_counter()
-            new_score = self.policy.score(art, self)
-            self.stats["score_time_s"] += time.perf_counter() - t0
-            while self.used_bytes + b > self.capacity_bytes:
-                if not self.items:
-                    break
-                k_min, s_min = self._min_scored()
-                if s_min >= new_score:
-                    self.stats["rejected"] += 1
-                    return False               # new artifact loses
-                self._evict(k_min)
-                # paper: re-evaluate remaining items after every removal —
-                # the epoch bump invalidates the heap; the rebuild is cheap
-                # because untouched items hit the policy memos
-            self._insert(art)
-            return True
-
-    def _sync_workflow_versions(self) -> None:
-        wf = self.workflow
-        v = (None if wf is None
-             else (wf.structure_version, wf.weights_version))
-        if v != self._wf_versions:
-            self._wf_versions = v
-            self._epoch += 1
-
-    def _min_scored(self) -> Tuple[str, float]:
-        """Current lowest-scored item; re-validates the heap if stale."""
-        if self._heap_epoch != self._epoch:
-            arts = list(self.items.values())
-            t0 = time.perf_counter()
-            scores = self.policy.score_many(arts, self)
-            self.stats["score_time_s"] += time.perf_counter() - t0
-            self._heap = [(s, a.insertion, a.name)
-                          for s, a in zip(scores, arts)]
-            heapq.heapify(self._heap)
-            self._heap_epoch = self._epoch
-        s, _, name = self._heap[0]
-        return name, s
-
-    def _insert(self, art: CachedArtifact) -> None:
-        old = self.items.pop(art.name, None)
-        if old is not None:
-            # same-key refresh: replace in place — NOT an eviction (and not
-            # a second admission), so policy stats stay comparable
-            self.used_bytes -= old.bytes
-            self.stats["refreshed"] += 1
-        else:
-            self.stats["admitted"] += 1
-        self.items[art.name] = art
-        self.used_bytes += art.bytes
-        self._epoch += 1
-
-    def _evict(self, name: str) -> None:
-        art = self.items.pop(name)
-        self.used_bytes -= art.bytes
-        self.stats["evictions"] += 1
-        self._epoch += 1
-
-    def hit_ratio(self) -> float:
-        tot = self.stats["hits"] + self.stats["misses"]
-        return self.stats["hits"] / tot if tot else 0.0
+from repro.core.cache import (  # noqa: F401
+    POLICIES, CacheAll, CachePolicy, CacheStore, CacheTier, CachedArtifact,
+    CoulerPolicy, FIFOPolicy, LRUPolicy, NoCache, SharedRemoteTier,
+    TierSpec, TieredCacheStore, default_tiers, importance, mem_spec,
+    predecessor_subgraph, reconstruction_cost, remote_spec, reuse_value,
+    sizeof, ssd_spec, successor_subgraph,
+)
+
+__all__ = [
+    "POLICIES", "CacheAll", "CachePolicy", "CacheStore", "CacheTier",
+    "CachedArtifact", "CoulerPolicy", "FIFOPolicy", "LRUPolicy", "NoCache",
+    "SharedRemoteTier", "TierSpec", "TieredCacheStore", "default_tiers",
+    "importance", "mem_spec", "predecessor_subgraph", "reconstruction_cost",
+    "remote_spec", "reuse_value", "sizeof", "ssd_spec",
+    "successor_subgraph",
+]

@@ -16,6 +16,20 @@ usage), cluster-blocked jobs whenever any completion frees cluster capacity
 — so each event touches O(woken + newly-ready) jobs, O((V+E)·log V) per
 batch, instead of the former full rescan of every job of every active
 workflow per event.
+
+Artifact locality (tiered-cache integration)
+--------------------------------------------
+Pass ``caches`` (cluster name → ``TieredCacheStore``, ideally all sharing
+one ``SharedRemoteTier``) to make placement locality-aware: a finished
+job's artifact is offered to its cluster's store, and a consumer job is
+placed on the fitting cluster minimizing its input materialization cost —
+per input, ``min(fetch, recompute)`` where fetch is the holding tier's
+``latency + bytes/bandwidth`` (or the cross-cluster transfer path when the
+artifact is only resident elsewhere) and recompute is the Eq. 3-style
+first-hop reconstruction cost (producer est_time_s). The winning cost is
+added to the job's simulated duration, so makespans reflect data movement
+instead of assuming uniform hit latency. With ``caches=None`` (default)
+scheduling is bit-identical to the cache-oblivious behavior.
 """
 from __future__ import annotations
 
@@ -24,6 +38,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.cache.store import TieredCacheStore
 from repro.core.engines.base import Engine, StepRecord, StepStatus, WorkflowRun
 from repro.core.ir import WorkflowIR
 
@@ -103,7 +118,10 @@ class MultiClusterEngine(Engine):
     name = "cluster"
 
     def __init__(self, clusters: Optional[List[Cluster]] = None,
-                 quotas: Optional[Dict[str, UserQuota]] = None):
+                 quotas: Optional[Dict[str, UserQuota]] = None,
+                 caches: Optional[Dict[str, "TieredCacheStore"]] = None,
+                 xfer_bandwidth_bytes_s: float = 1.2e8,
+                 xfer_latency_s: float = 2e-2):
         self.clusters = clusters or [
             Cluster("gpu-cluster", cpu=512, mem_bytes=2048 * 2**30, gpu=64),
             Cluster("cpu-cluster", cpu=2048, mem_bytes=8192 * 2**30),
@@ -112,9 +130,14 @@ class MultiClusterEngine(Engine):
         # precomputed candidate list: GPU jobs may only land on GPU clusters
         self._gpu_clusters = [c for c in self.clusters if c.gpu > 0]
         self.quotas = quotas or {}
+        # per-cluster tiered artifact stores (None = cache-oblivious)
+        self.caches = caches
+        self.xfer_bandwidth_bytes_s = xfer_bandwidth_bytes_s
+        self.xfer_latency_s = xfer_latency_s
         self._seq = itertools.count()
         self.metrics = {"scheduled_jobs": 0, "completed_workflows": 0,
                         "failed_admission": 0, "makespan_s": 0.0,
+                        "fetch_wait_s": 0.0, "recompute_wait_s": 0.0,
                         "cluster_busy_s": {c.name: 0.0 for c in self.clusters}}
 
     def _quota(self, user: str) -> UserQuota:
@@ -122,17 +145,101 @@ class MultiClusterEngine(Engine):
             self.quotas[user] = UserQuota()
         return self.quotas[user]
 
-    def _pick_cluster(self, job) -> Optional[Cluster]:
+    def _pick_cluster(self, job, st: Optional["_WfState"] = None,
+                      n: Optional[str] = None) -> Optional[Cluster]:
         """Weighted choice: prefer fitting cluster with the lowest load;
-        GPU jobs must land on a GPU cluster."""
+        GPU jobs must land on a GPU cluster. With per-cluster caches
+        attached, artifact locality dominates: the fitting cluster with the
+        cheapest input materialization wins, load breaks ties."""
         pool = self._gpu_clusters if job.resources.gpu > 0 else self.clusters
-        best, best_load = None, float("inf")
+        if self.caches is None or st is None:
+            best, best_load = None, float("inf")
+            for c in pool:
+                if c.fits(job):
+                    l = c.load()
+                    if l < best_load:
+                        best, best_load = c, l
+            return best
+        best, best_key = None, None
         for c in pool:
             if c.fits(job):
-                l = c.load()
-                if l < best_load:
-                    best, best_load = c, l
+                key = (round(self._input_cost_s(st, n, c), 9), c.load())
+                if best_key is None or key < best_key:
+                    best, best_key = c, key
         return best
+
+    # -- artifact locality (tiered caches) ---------------------------------
+    @staticmethod
+    def _art_key(wf: WorkflowIR, job_name: str) -> str:
+        return f"{wf.name}/{job_name}"
+
+    def _input_fetch_s(self, wf: WorkflowIR, p: str,
+                       cluster: Cluster) -> Tuple[float, float]:
+        """(fetch_s, recompute_s) for predecessor p's artifact seen from
+        `cluster`: fetch prices the holding tier (latency + bytes/bw) when
+        locally resident (incl. a shared REMOTE tier), the cross-cluster
+        transfer path when only a sibling cluster holds it, and infinity
+        when it is cached nowhere (nothing to fetch — the consumer must
+        recompute); recompute is the Eq. 3 first-hop reconstruction cost
+        (the producer's est_time_s)."""
+        job = wf.jobs[p]
+        nbytes = max(1, job.est_mem_bytes)
+        key = self._art_key(wf, p)
+        store = self.caches.get(cluster.name)
+        tier = store.find_tier(key) if store else None
+        if tier is not None:
+            fetch = tier.access_time_s(nbytes)
+        elif any(c is not store and c.find_tier(key) is not None
+                 for c in self.caches.values()):
+            fetch = self.xfer_latency_s + nbytes / self.xfer_bandwidth_bytes_s
+        else:
+            fetch = float("inf")
+        return fetch, job.est_time_s, nbytes
+
+    def _input_cost_s(self, st: "_WfState", n: str,
+                      cluster: Cluster) -> float:
+        """Simulated time to materialize job n's inputs on `cluster`: per
+        input, the consumer takes min(fetch, recompute)."""
+        total = 0.0
+        for p in st.wf.predecessors(n):
+            fetch, recompute, _ = self._input_fetch_s(st.wf, p, cluster)
+            total += min(fetch, recompute)
+        return total
+
+    def _charge_inputs_s(self, st: "_WfState", n: str,
+                         cluster: Cluster) -> float:
+        """Like _input_cost_s, but records the decision: a fetch goes
+        through the SERVING store's get() (hit accounting + the promotion
+        signal land on whichever cluster actually holds the artifact), a
+        recompute re-offers the rebuilt artifact to the local store so
+        later consumers on this cluster fetch instead of re-paying it, and
+        the waits split into fetch vs recompute metrics."""
+        store = self.caches.get(cluster.name)
+        total = 0.0
+        for p in st.wf.predecessors(n):
+            fetch, recompute, nbytes = self._input_fetch_s(st.wf, p, cluster)
+            key = self._art_key(st.wf, p)
+            if fetch <= recompute:
+                server = store if store is not None \
+                    and store.find_tier(key) is not None else next(
+                        (c for c in self.caches.values()
+                         if c.find_tier(key) is not None), None)
+                if server is not None:
+                    server.get(key)
+                    if server is not store and store is not None:
+                        # cross-cluster pull: keep the fetched copy local
+                        # so later consumers here skip the transfer
+                        store.offer(key, None, compute_time_s=recompute,
+                                    producer=p, nbytes=nbytes)
+                total += fetch
+                self.metrics["fetch_wait_s"] += fetch
+            else:
+                total += recompute
+                self.metrics["recompute_wait_s"] += recompute
+                if store is not None:
+                    store.offer(key, None, compute_time_s=recompute,
+                                producer=p, nbytes=nbytes)
+        return total
 
     def submit_many(self, workflows: List[Tuple[WorkflowIR, str, int]]
                     ) -> Dict[str, WorkflowRun]:
@@ -195,7 +302,7 @@ class MultiClusterEngine(Engine):
                     if not q.fits(job):
                         quota_waiters.setdefault(st.user, []).append((ai, i))
                         continue
-                    c = self._pick_cluster(job)
+                    c = self._pick_cluster(job, st, n)
                     if c is None:
                         self.metrics["failed_admission"] += 1
                         cluster_waiters.append((ai, i))
@@ -210,7 +317,10 @@ class MultiClusterEngine(Engine):
                     st.run.steps[n].status = StepStatus.RUNNING
                     st.run.steps[n].start = now
                     self.metrics["scheduled_jobs"] += 1
-                    heapq.heappush(events, (now + job.est_time_s,
+                    dur = job.est_time_s
+                    if self.caches is not None:
+                        dur += self._charge_inputs_s(st, n, c)
+                    heapq.heappush(events, (now + dur,
                                             next(self._seq), c, st.user,
                                             st, n))
 
@@ -227,10 +337,23 @@ class MultiClusterEngine(Engine):
             q.used_cpu -= r.cpu
             q.used_mem -= r.mem_bytes
             q.used_gpu -= r.gpu
-            self.metrics["cluster_busy_s"][c.name] += job.est_time_s * r.cpu
             rec = st.run.steps[n]
+            # with caches the job holds its resources for est_time_s PLUS
+            # the charged input-materialization wait (now - start); without
+            # caches keep the exact legacy expression (equivalence suite)
+            busy = (job.est_time_s if self.caches is None
+                    else now - rec.start)
+            self.metrics["cluster_busy_s"][c.name] += busy * r.cpu
             rec.status = StepStatus.SUCCEEDED
             rec.end = now
+            if self.caches is not None:
+                store = self.caches.get(c.name)
+                if store is not None:
+                    # the artifact materializes on the cluster that ran the
+                    # producer; demotion may later push it to shared REMOTE
+                    store.offer(self._art_key(st.wf, n), None,
+                                compute_time_s=job.est_time_s, producer=n,
+                                nbytes=max(1, job.est_mem_bytes))
             st.remaining -= 1
             newly_ready = False
             for s in st.wf.successors(n):

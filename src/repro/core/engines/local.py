@@ -3,7 +3,9 @@
 Implements the production behaviours of App. B:
   * topological scheduling with a worker pool (max parallelism, Eq. 1 goal)
   * automatic artifact caching (Algorithm 2) — steps whose outputs hit the
-    cache are marked ``Cached`` and skipped
+    cache are marked ``Cached`` and skipped; ``cache`` accepts the default
+    single-tier ``CacheStore`` or a multi-tier ``TieredCacheStore``
+    (``repro.core.cache``) — both expose the same offer/get surface
   * controller auto-retry with backoff on the known transient patterns
   * straggler mitigation: a speculative duplicate races any step exceeding
     ``straggler_factor x est_time_s`` when spare workers exist

@@ -80,8 +80,12 @@ def main(argv=None) -> None:
             state = mgr.restore(like=jax.tree.map(
                 lambda x: __import__("numpy").asarray(x), state))
         state = jax.device_put(state, state_sh)
+        # pin out_shardings to the input specs: without it GSPMD may hand
+        # the state back re-sharded (e.g. norm scales gathered onto
+        # 'model'), and the next step_fn call rejects the committed arrays
         step_fn = jax.jit(TR.make_train_step(cfg, tcfg),
                           in_shardings=(state_sh, None),
+                          out_shardings=(state_sh, None),
                           donate_argnums=(0,))
 
         it = synthetic_batches(args.batch, args.seq, cfg.vocab_size,

@@ -1,14 +1,18 @@
-"""Version-tolerant ``shard_map`` import.
+"""Version-tolerant ``shard_map`` / axis-introspection imports.
 
 jax moved ``shard_map`` from ``jax.experimental.shard_map`` (0.4.x) to the
 top-level ``jax`` namespace (>= 0.5) and renamed the replication-check kwarg
 ``check_rep`` -> ``check_vma`` along the way. Import ``shard_map`` from here
 and use either kwarg; the shim translates to whatever the installed jax
-accepts.
+accepts. ``axis_size`` wraps ``jax.lax.axis_size`` (added ~0.5) with the
+classic ``psum(1, axis)`` idiom for 0.4.x (psum of an unmapped constant is
+folded to ``1 * axis_size`` at trace time, so the result stays concrete).
 """
 from __future__ import annotations
 
 import inspect
+
+import jax
 
 try:                                    # jax >= 0.5 exposes it top-level
     from jax import shard_map as _shard_map
@@ -26,3 +30,10 @@ def shard_map(*args, **kwargs):
         if "check_vma" in kwargs:
             kwargs["check_rep"] = kwargs.pop("check_vma")
     return _shard_map(*args, **kwargs)
+
+
+def axis_size(axis_name: str) -> int:
+    """Size of a mapped mesh axis, callable inside shard_map/pmap bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return int(jax.lax.psum(1, axis_name))

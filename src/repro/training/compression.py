@@ -22,7 +22,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from repro.sharding.compat import shard_map
+from repro.sharding.compat import axis_size, shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -37,7 +37,7 @@ def _dequantize(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
 
 def compressed_psum_mean(g: jax.Array, axis: str) -> jax.Array:
     """int8 ring all-reduce-mean over ``axis`` (call inside shard_map)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     flat = g.reshape(-1).astype(jnp.float32)
     pad = (-flat.shape[0]) % n
     flat = jnp.pad(flat, (0, pad))

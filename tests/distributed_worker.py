@@ -62,8 +62,12 @@ def check_reduced_arch_sharded_train():
                  "targets": jnp.ones((4, 32), jnp.int32)}
         bsh = to_named(batch_specs(batch, mesh, rules), mesh)
         batch = jax.device_put(batch, bsh)
+        # out_shardings must pin the state: GSPMD otherwise re-shards the
+        # (2,64)/(64,) norm scales onto 'model' on output, and the second
+        # call fails the pjit arg-sharding check against state_sh
         step = jax.jit(TR.make_train_step(cfg, tcfg),
-                       in_shardings=(state_sh, bsh))
+                       in_shardings=(state_sh, bsh),
+                       out_shardings=(state_sh, None))
         state, m = step(state, batch)
         l1 = float(m["loss"])
         state, m = step(state, batch)

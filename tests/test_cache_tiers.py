@@ -1,0 +1,462 @@
+"""Tiered cache subsystem tests (repro.core.cache).
+
+Covers the ISSUE-4 acceptance points: demotion cascade under MEM pressure,
+Eq. 6-driven promotion after repeated gets, single-tier facade equivalence
+with the pre-tier ``CacheStore`` on a seeded trace (reference
+implementation vendored below, like test_scheduler_equivalence does for
+the scheduler), cross-cluster ``SharedRemoteTier`` hit accounting,
+locality-aware ``MultiClusterEngine`` placement, and the documented Eq. 4
+literal-vs-deviation behaviors.
+"""
+import heapq
+import random
+import time
+
+import pytest
+
+from repro.core.cache import (CacheStore, CacheTier, CoulerPolicy,
+                              FIFOPolicy, LRUPolicy, SharedRemoteTier,
+                              TierSpec, TieredCacheStore, mem_spec,
+                              remote_spec, reuse_value, ssd_spec)
+from repro.core.cache.policies import CacheAll
+from repro.core.engines.cluster import Cluster, MultiClusterEngine
+from repro.core.ir import Job, WorkflowIR
+
+
+def fan_wf(fanout=4):
+    wf = WorkflowIR("f")
+    wf.add_job(Job(name="root", est_time_s=5))
+    wf.add_job(Job(name="mid", est_time_s=3))
+    wf.add_edge("root", "mid")
+    for i in range(fanout):
+        wf.add_job(Job(name=f"leaf{i}", est_time_s=1))
+        wf.add_edge("mid", f"leaf{i}")
+    return wf
+
+
+def chain_wf(n=4):
+    wf = WorkflowIR("c")
+    prev = None
+    for i in range(n):
+        wf.add_job(Job(name=f"j{i}", est_time_s=1.0 + i))
+        if prev:
+            wf.add_edge(prev, f"j{i}")
+        prev = f"j{i}"
+    return wf
+
+
+def three_tiers(mem=300, ssd=600, remote=900):
+    return [CacheTier(TierSpec("MEM", mem, 8e9, 2e-6)),
+            CacheTier(TierSpec("SSD", ssd, 1.2e9, 2.5e-4)),
+            CacheTier(TierSpec("REMOTE", remote, 1.2e8, 2e-2))]
+
+
+# ---------------------------------------------------------------------------
+# demotion cascade
+# ---------------------------------------------------------------------------
+
+def test_demotion_cascade_under_mem_pressure():
+    """MEM overflow demotes FIFO-oldest downward tier by tier; artifacts
+    only fall off the cache entirely at the REMOTE tier."""
+    store = TieredCacheStore(tiers=three_tiers(), policy=FIFOPolicy())
+    for i in range(20):
+        assert store.offer(f"a{i}", b"x" * 100, 1.0, producer=f"j{i}")
+    # capacities 300/600/900 bytes -> 3 + 6 + 9 = 18 items survive
+    assert len(store.items) == 18
+    assert store.used_bytes == 1800
+    # newest in MEM, oldest still cached in REMOTE
+    assert set(store.tiers[0].items) == {"a17", "a18", "a19"}
+    assert "a2" in store.tiers[2].items
+    # only the 2 oldest fell off the cache, and only off REMOTE
+    assert store.stats["evictions"] == 2
+    assert not store.contains("a0") and not store.contains("a1")
+    assert store.tiers[2].stats["evictions"] == 2
+    assert store.tiers[0].stats["evictions"] == 0
+    assert store.tiers[1].stats["evictions"] == 0
+    # every MEM demotion arrived in SSD, every SSD demotion in REMOTE
+    assert store.tiers[0].stats["demotions_out"] == \
+        store.tiers[1].stats["demotions_in"]
+    assert store.tiers[1].stats["demotions_out"] == \
+        store.tiers[2].stats["demotions_in"]
+    assert store.stats["demotions"] > 0
+    store.check_invariants()
+
+
+def test_artifact_too_big_for_mem_lands_lower():
+    store = TieredCacheStore(tiers=three_tiers(), policy=FIFOPolicy())
+    assert store.offer("big", b"x" * 500, 1.0, producer="p")
+    assert "big" in store.tiers[1].items          # skipped 300-byte MEM
+    assert store.offer("huge", b"x" * 700, 1.0, producer="p2")
+    assert "huge" in store.tiers[2].items
+    assert not store.offer("absurd", b"x" * 5000, 1.0, producer="p3")
+    assert store.stats["rejected"] == 1
+    store.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Eq. 6 promotion
+# ---------------------------------------------------------------------------
+
+def test_eq6_promotion_after_repeated_gets():
+    """Observed hits fold into Eq. 4's reuse events: an artifact demoted
+    out of MEM climbs back after enough gets, displacing the incumbent."""
+    wf = fan_wf(5)
+    store = TieredCacheStore(tiers=three_tiers(mem=150, ssd=400, remote=900),
+                             policy=CoulerPolicy())
+    store.attach_workflow(wf)
+    assert store.offer("leaf0:out", b"x" * 100, 0.5, producer="leaf0")
+    assert "leaf0:out" in store.tiers[0].items
+    # mid (5 successors -> high F) displaces leaf0 down to SSD
+    assert store.offer("mid:out", b"y" * 100, 3.0, producer="mid")
+    assert "mid:out" in store.tiers[0].items
+    assert "leaf0:out" in store.tiers[1].items
+    # leaf0 gets hot: each hit is one of Eq. 4's r reuse events
+    for _ in range(15):
+        assert store.get("leaf0:out") is not None
+    moved = store.promote()
+    assert moved["promoted"] >= 1
+    assert "leaf0:out" in store.tiers[0].items    # climbed back to MEM
+    assert "mid:out" in store.tiers[1].items      # incumbent sank
+    store.check_invariants()
+
+
+def test_promote_does_not_pin_orphaned_artifacts():
+    """An artifact whose producer vanished from the attached workflow must
+    not out-rank live Eq. 6 scores in the promotion re-pack (its eviction
+    fallback is an epoch timestamp, which would pin it into MEM forever)."""
+    wf = fan_wf(5)
+    store = TieredCacheStore(tiers=three_tiers(mem=150, ssd=400, remote=900),
+                             policy=CoulerPolicy())
+    store.attach_workflow(wf)
+    assert store.offer("ghost:out", b"x" * 100, 1.0, producer="ghost")
+    assert "ghost:out" in store.tiers[0].items
+    # the orphan's timestamp fallback wins the admission contest, so the
+    # genuinely valuable artifact lands in SSD...
+    assert store.offer("mid:out", b"y" * 100, 3.0, producer="mid")
+    assert "mid:out" in store.tiers[1].items
+    # ...but the promotion pass ranks orphans below everything
+    store.promote()
+    assert "mid:out" in store.tiers[0].items
+    assert "ghost:out" in store.tiers[1].items
+    store.check_invariants()
+
+
+def test_promotion_noop_when_ranking_matches_layout():
+    store = TieredCacheStore(tiers=three_tiers(), policy=FIFOPolicy())
+    for i in range(3):
+        store.offer(f"a{i}", b"x" * 100, 1.0, producer=f"j{i}")
+    before = dict(store.tiers[0].items)
+    moved = store.promote()
+    assert moved == {"promoted": 0, "demoted": 0, "copied_up": 0}
+    assert store.tiers[0].items == before
+
+
+# ---------------------------------------------------------------------------
+# single-tier facade == legacy CacheStore (reference vendored verbatim)
+# ---------------------------------------------------------------------------
+
+class LegacyCacheStore:
+    """Pre-tier CacheStore (PR 3 state), vendored as the behavioral
+    reference for the facade."""
+
+    def __init__(self, capacity_bytes=1 << 30, policy=None):
+        import threading
+        from repro.core.cache.scoring import CachedArtifact  # noqa: F401
+        self.capacity_bytes = capacity_bytes
+        self.policy = policy or CoulerPolicy()
+        self.items = {}
+        self.used_bytes = 0
+        self.workflow = None
+        self._insertions = 0
+        self._lock = threading.RLock()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
+                      "admitted": 0, "rejected": 0, "refreshed": 0,
+                      "score_time_s": 0.0}
+        self._epoch = 0
+        self._heap = []
+        self._heap_epoch = -1
+        self._wf_versions = None
+
+    def attach_workflow(self, wf):
+        if wf is not self.workflow:
+            self.workflow = wf
+            self.policy.invalidate(wf)
+            self._epoch += 1
+
+    def get(self, name):
+        art = self.items.get(name)
+        if art is None:
+            self.stats["misses"] += 1
+            return None
+        art.last_used = time.time()
+        art.uses += 1
+        self.stats["hits"] += 1
+        self._epoch += 1
+        return art
+
+    def offer(self, name, value, compute_time_s, producer, nbytes=None):
+        from repro.core.cache.scoring import CachedArtifact, sizeof
+        b = nbytes if nbytes is not None else sizeof(value)
+        art = CachedArtifact(name=name, value=value, bytes=b,
+                             compute_time_s=compute_time_s,
+                             producer=producer, insertion=self._insertions)
+        self._insertions += 1
+        if not self.policy.admit(art):
+            self.stats["rejected"] += 1
+            return False
+        if b > self.capacity_bytes:
+            self.stats["rejected"] += 1
+            return False
+        if self.used_bytes + b <= self.capacity_bytes:
+            self._insert(art)
+            return True
+        self._sync_workflow_versions()
+        new_score = self.policy.score(art, self)
+        while self.used_bytes + b > self.capacity_bytes:
+            if not self.items:
+                break
+            k_min, s_min = self._min_scored()
+            if s_min >= new_score:
+                self.stats["rejected"] += 1
+                return False
+            self._evict(k_min)
+        self._insert(art)
+        return True
+
+    def _sync_workflow_versions(self):
+        wf = self.workflow
+        v = (None if wf is None
+             else (wf.structure_version, wf.weights_version))
+        if v != self._wf_versions:
+            self._wf_versions = v
+            self._epoch += 1
+
+    def _min_scored(self):
+        if self._heap_epoch != self._epoch:
+            arts = list(self.items.values())
+            scores = self.policy.score_many(arts, self)
+            self._heap = [(s, a.insertion, a.name)
+                          for s, a in zip(scores, arts)]
+            heapq.heapify(self._heap)
+            self._heap_epoch = self._epoch
+        s, _, name = self._heap[0]
+        return name, s
+
+    def _insert(self, art):
+        old = self.items.pop(art.name, None)
+        if old is not None:
+            self.used_bytes -= old.bytes
+            self.stats["refreshed"] += 1
+        else:
+            self.stats["admitted"] += 1
+        self.items[art.name] = art
+        self.used_bytes += art.bytes
+        self._epoch += 1
+
+    def _evict(self, name):
+        art = self.items.pop(name)
+        self.used_bytes -= art.bytes
+        self.stats["evictions"] += 1
+        self._epoch += 1
+
+
+LEGACY_KEYS = ("hits", "misses", "evictions", "admitted", "rejected",
+               "refreshed")
+
+
+@pytest.mark.parametrize("policy_cls", [FIFOPolicy, LRUPolicy, CacheAll,
+                                        CoulerPolicy])
+def test_single_tier_facade_matches_legacy(policy_cls):
+    """Same seeded offer/get trace -> identical admission/eviction
+    decisions, stats, contents and byte usage as the pre-tier store."""
+    rng = random.Random(7)
+    ops = []
+    keys = [f"k{i}" for i in range(12)]
+    producers = ["root", "mid"] + [f"leaf{i}" for i in range(4)] + ["ghost"]
+    for _ in range(300):
+        if rng.random() < 0.6:
+            ops.append(("offer", rng.choice(keys),
+                        rng.choice([40, 90, 150, 260]),
+                        rng.choice(producers)))
+        else:
+            ops.append(("get", rng.choice(keys)))
+
+    def drive(store):
+        store.attach_workflow(fan_wf(4))
+        decisions = []
+        for op in ops:
+            if op[0] == "offer":
+                _, k, b, p = op
+                decisions.append(store.offer(k, None, 1.0, producer=p,
+                                             nbytes=b))
+            else:
+                decisions.append(store.get(op[1]) is not None)
+        return decisions
+
+    new = CacheStore(capacity_bytes=500, policy=policy_cls())
+    old = LegacyCacheStore(capacity_bytes=500, policy=policy_cls())
+    d_new = drive(new)
+    d_old = drive(old)
+    assert d_new == d_old
+    assert {k: new.stats[k] for k in LEGACY_KEYS} == \
+        {k: old.stats[k] for k in LEGACY_KEYS}
+    assert sorted(new.items) == sorted(old.items)
+    assert new.used_bytes == old.used_bytes
+    new.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# cross-cluster shared REMOTE tier
+# ---------------------------------------------------------------------------
+
+def test_shared_remote_cross_cluster_hit_accounting():
+    shared = SharedRemoteTier(remote_spec(1000))
+    a = TieredCacheStore(
+        tiers=[CacheTier(mem_spec(200)), shared],
+        policy=FIFOPolicy(), name="cluster-a")
+    b = TieredCacheStore(
+        tiers=[CacheTier(mem_spec(200)), shared],
+        policy=FIFOPolicy(), name="cluster-b")
+    for i in range(3):                       # x0 demotes into shared REMOTE
+        assert a.offer(f"x{i}", None, 1.0, producer=f"p{i}", nbytes=100)
+    assert "x0" in shared.items
+    # a cluster that never fetched x0 through the shared tier must not
+    # replicate it into its private tiers (copy-up is gated on LOCAL use,
+    # not the cross-cluster art.uses counter)
+    assert b.promote()["copied_up"] == 0
+    # cluster-b sees cluster-a's demoted artifact through the shared tier
+    hit = b.get("x0")
+    assert hit is not None
+    assert b.stats["hits"] == 1 and b.stats["misses"] == 0
+    assert a.get("x0") is not None
+    assert shared.hits_by_client == {"cluster-b": 1, "cluster-a": 1}
+    # promotion COPIES out of the shared tier: b gets a private replica,
+    # the remote copy survives for other clusters
+    moved = b.promote()
+    assert moved["copied_up"] == 1
+    assert "x0" in b.tiers[0].items and "x0" in shared.items
+    a.check_invariants()
+    b.check_invariants()
+
+
+def test_cluster_engine_placement_follows_artifact_locality():
+    """With per-cluster stores attached, a consumer lands on the cluster
+    already holding its input artifact (fetch beats cross-cluster pull)."""
+    def mk_store(name):
+        return TieredCacheStore(tiers=[CacheTier(mem_spec(8 << 20))],
+                                policy=LRUPolicy(), name=name)
+    caches = {"ca": mk_store("ca"), "cb": mk_store("cb")}
+    eng = MultiClusterEngine(
+        clusters=[Cluster("ca", cpu=64, mem_bytes=1 << 40),
+                  Cluster("cb", cpu=64, mem_bytes=1 << 40)],
+        caches=caches)
+    wf = WorkflowIR("loc")
+    wf.add_job(Job(name="a", est_time_s=5.0))
+    wf.add_job(Job(name="b", est_time_s=1.0))
+    wf.add_edge("a", "b")
+    run = eng.submit(wf)
+    assert run.succeeded()
+    # a ran on ca (first fitting, both idle) and left its artifact there;
+    # b must follow it: one hit on ca's store, none on cb's
+    assert caches["ca"].stats["hits"] == 1
+    assert caches["cb"].stats["hits"] == 0
+    assert eng.metrics["fetch_wait_s"] > 0.0
+    # makespan = a + b + the MEM fetch of a's 1 MiB artifact (~0.13 ms),
+    # far below the 28 ms cross-cluster pull it avoided
+    assert 6.0 < eng.metrics["makespan_s"] < 6.01
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 literal vs documented deviation
+# ---------------------------------------------------------------------------
+
+def test_reuse_value_literal_vs_deviation():
+    """Pins both behaviors of the documented Eq. 4 choice: the literal
+    equation zeroes DIRECT successors (zeta_ui = -A_ui), the default
+    |zeta| deviation makes them count most."""
+    fan = fan_wf(4)
+    assert reuse_value(fan, "mid") == pytest.approx(8.0)          # 4*(1+1)
+    assert reuse_value(fan, "mid", literal_eq4=True) == pytest.approx(0.0)
+    chain = chain_wf(4)
+    # from j0: j1 at kappa=1 (zeta=-1), j2 at 2, j3 at 3 (zeta=0)
+    assert reuse_value(chain, "j0") == pytest.approx(2 + 1 / 2 + 1 / 3)
+    assert reuse_value(chain, "j0", literal_eq4=True) == \
+        pytest.approx(0 + 1 / 2 + 1 / 3)
+    # flag flows through the policy: literal scores mid's artifact lower
+    lit = CoulerPolicy(literal_eq4=True)
+    dev = CoulerPolicy()
+    store = CacheStore(capacity_bytes=1000, policy=dev)
+    store.attach_workflow(fan)
+    store.offer("mid:out", None, 3.0, producer="mid", nbytes=10)
+    art = store.items["mid:out"]
+    assert lit.score(art, store) < dev.score(art, store)
+
+
+# ---------------------------------------------------------------------------
+# fuzz: ledger invariants under arbitrary traffic
+# ---------------------------------------------------------------------------
+
+def test_shared_tier_concurrent_stores_keep_invariants():
+    """Two stores hammer one SharedRemoteTier from separate threads; the
+    atomic put_if_fits path must keep the shared tier within capacity and
+    the byte ledgers balanced."""
+    import threading
+    shared = SharedRemoteTier(remote_spec(1500))
+    stores = [TieredCacheStore(tiers=[CacheTier(mem_spec(300)), shared],
+                               policy=FIFOPolicy(), name=f"s{i}")
+              for i in range(2)]
+    errors = []
+
+    def work(store, seed):
+        rng = random.Random(seed)
+        try:
+            for _ in range(400):
+                r = rng.random()
+                if r < 0.6:
+                    store.offer(f"k{rng.randrange(12)}", None, 1.0,
+                                producer="p",
+                                nbytes=rng.choice([60, 120, 280]))
+                elif r < 0.9:
+                    store.get(f"k{rng.randrange(12)}")
+                else:
+                    store.promote()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(s, i))
+               for i, s in enumerate(stores)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    shared.check_ledger()                    # capacity + ledger balanced
+    for s in stores:
+        s.check_invariants()
+
+
+@pytest.mark.parametrize("policy_cls,seed", [(FIFOPolicy, 0), (LRUPolicy, 1),
+                                             (CoulerPolicy, 2)])
+def test_invariants_under_random_traffic(policy_cls, seed):
+    rng = random.Random(seed)
+    shared = SharedRemoteTier(remote_spec(2000))
+    store = TieredCacheStore(
+        tiers=[CacheTier(mem_spec(400)), CacheTier(ssd_spec(800)), shared],
+        policy=policy_cls(), name="fuzz", auto_promote_every=7)
+    store.attach_workflow(fan_wf(4))
+    keys = [f"k{i}" for i in range(20)]
+    producers = ["root", "mid", "leaf0", "leaf1", "other"]
+    for i in range(500):
+        r = rng.random()
+        if r < 0.55:
+            store.offer(rng.choice(keys), None, rng.uniform(0.1, 3.0),
+                        producer=rng.choice(producers),
+                        nbytes=rng.choice([30, 80, 140, 390, 900]))
+        elif r < 0.9:
+            store.get(rng.choice(keys))
+        else:
+            store.promote()
+        if i % 50 == 0:
+            store.check_invariants()
+    store.check_invariants()
+    assert store.used_bytes <= 400 + 800 + 2000
