@@ -1,0 +1,100 @@
+"""Gateway concurrency: serial sync-loop vs asyncio gateway wall-clock.
+
+Serial baseline: N sequential ``LocalEngine.submit()`` calls — one caller
+blocks per workflow, so wall time is the sum of all workflow latencies.
+Gateway: the same N workflows admitted with ``submit_async`` from 8
+tenants and awaited together — thousands of runs multiplex onto one shared
+worker pool with bounded in-flight steps. The acceptance bar is a >=5x
+speedup at n=500 with the in-flight bound enforced (reported per row).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Dict, List, Sequence
+
+from repro.core.engines.local import LocalEngine
+from repro.core.ir import Job, WorkflowIR
+
+STEP_SLEEP_S = 0.01
+CHAIN_LEN = 3
+MAX_WORKERS = 32
+MAX_INFLIGHT_STEPS = 64
+
+
+def _work(i: int, s: int) -> int:
+    time.sleep(STEP_SLEEP_S)
+    return i * CHAIN_LEN + s
+
+
+def _chain_wf(tag: str, i: int) -> WorkflowIR:
+    wf = WorkflowIR(f"gwb-{tag}-{i}")
+    prev = None
+    for s in range(CHAIN_LEN):
+        name = f"s{s}"
+        wf.add_job(Job(name=name, fn=_work, args=(i, s), cacheable=False,
+                       outputs=[f"{name}:out"], est_time_s=STEP_SLEEP_S))
+        if prev is not None:
+            wf.add_edge(prev, name)
+        prev = name
+    return wf
+
+
+def _serial(n: int) -> float:
+    eng = LocalEngine(max_workers=MAX_WORKERS, enable_speculation=False,
+                      promote_interval_s=0.0)
+    t0 = time.time()
+    for i in range(n):
+        run = eng.submit(_chain_wf("ser", i), optimize=False)
+        assert run.succeeded(), run.status
+    wall = time.time() - t0
+    eng.close()
+    return wall
+
+
+def _gateway(n: int) -> Dict:
+    eng = LocalEngine(max_workers=MAX_WORKERS, enable_speculation=False,
+                      max_inflight_steps=MAX_INFLIGHT_STEPS,
+                      promote_interval_s=0.0)
+
+    async def drive():
+        handles = []
+        for i in range(n):
+            h = await eng.submit_async(_chain_wf("gw", i), optimize=False,
+                                       tenant=f"t{i % 8}", block=True)
+            handles.append(h)
+        return await asyncio.gather(*handles)
+
+    t0 = time.time()
+    runs = asyncio.run(drive())
+    wall = time.time() - t0
+    ok = all(r.succeeded() for r in runs)
+    peak = eng.gateway.stats["peak_inflight_steps"]
+    eng.close()
+    return {"wall_s": wall, "all_succeeded": ok,
+            "peak_inflight_steps": peak,
+            "bounded_inflight_ok": peak <= MAX_INFLIGHT_STEPS}
+
+
+def run(sizes: Sequence[int] = (100, 500)) -> List[Dict]:
+    rows: List[Dict] = []
+    for n in sizes:
+        serial_wall = _serial(n)
+        gw = _gateway(n)
+        rows.append({
+            "n_workflows": n,
+            "chain_len": CHAIN_LEN,
+            "step_sleep_ms": STEP_SLEEP_S * 1e3,
+            "serial_wall_s": round(serial_wall, 3),
+            "gateway_wall_s": round(gw["wall_s"], 3),
+            "speedup": round(serial_wall / max(gw["wall_s"], 1e-9), 1),
+            "all_succeeded": gw["all_succeeded"],
+            "peak_inflight_steps": gw["peak_inflight_steps"],
+            "bounded_inflight_ok": gw["bounded_inflight_ok"],
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

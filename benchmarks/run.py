@@ -48,6 +48,12 @@ SUITES = [
          all(r["within_crd_budget"] for r in rows))),
     ("throughput_rq1", "benchmarks.bench_throughput", {"n_workflows": 300},
      lambda rows: "workflows_per_s=" + str(rows[0]["workflows_per_s"])),
+    ("gateway_concurrency", "benchmarks.bench_gateway",
+     {"sizes": (100, 500)},
+     lambda rows: "speedup_n%d=%sx_bounded=%s" % (
+         rows[-1]["n_workflows"], rows[-1]["speedup"],
+         all(r["bounded_inflight_ok"] and r["all_succeeded"]
+             for r in rows))),
     ("learning_tableIV", "benchmarks.bench_learning", {},
      lambda rows: "couler_loc=" + str(
          [r for r in rows if r["interface"] == "couler"][0]["loc"])),

@@ -1,8 +1,10 @@
 """Quick CPU sanity loop: forward + train step on all reduced archs, plus
 a tier-consistency check of the cache subsystem (bytes conserved across
-demotions/promotions, capacity respected, no duplicate private copies)."""
+demotions/promotions, capacity respected, no duplicate private copies) and
+an event-stream ordering fuzz of the async workflow gateway."""
 import random
 import sys
+import time
 import traceback
 
 import jax
@@ -57,7 +59,75 @@ def cache_tier_sanity() -> bool:
     return True
 
 
+def gateway_event_sanity() -> bool:
+    """Fuzz: random DAGs (some randomly cancelled mid-flight) through the
+    asyncio gateway; every run's event stream must satisfy the ordering
+    invariants — ADMITTED first, exactly one terminal DONE last, STEP_*
+    only in between, and each step's terminal event preceded by its own
+    STEP_STARTED (see repro.core.gateway)."""
+    import asyncio
+
+    from repro.core.engines.local import LocalEngine
+    from repro.core.gateway import EventType
+    from repro.core.ir import Job, WorkflowIR
+
+    rng = random.Random(0)
+    eng = LocalEngine(max_workers=4, enable_speculation=False,
+                      promote_interval_s=0.0)
+
+    def build(i: int) -> WorkflowIR:
+        wf = WorkflowIR(f"fuzz-{i}")
+        n = rng.randint(2, 6)
+        for j in range(n):
+            wf.add_job(Job(name=f"s{j}", fn=lambda: time.sleep(0.001),
+                           cacheable=False, outputs=[f"s{j}:out"]))
+        for j in range(1, n):
+            for k in range(j):
+                if rng.random() < 0.4:
+                    wf.add_edge(f"s{k}", f"s{j}")
+        return wf
+
+    async def one(i: int) -> None:
+        h = await eng.submit_async(build(i), tenant=f"t{i % 3}", block=True)
+        if rng.random() < 0.3:
+            delay = rng.uniform(0, 0.01)
+
+            async def canceller():
+                await asyncio.sleep(delay)
+                h.cancel()
+            asyncio.get_running_loop().create_task(canceller())
+        evs = [ev async for ev in h.events()]
+        assert evs[0].type is EventType.WORKFLOW_ADMITTED, evs[0]
+        assert evs[-1].terminal, evs[-1]
+        assert sum(1 for e in evs if e.terminal) == 1, evs
+        assert all(e.is_step_event for e in evs[1:-1]), evs
+        seen_started = set()
+        for e in evs[1:-1]:
+            if e.type is EventType.STEP_STARTED:
+                seen_started.add(e.step)
+            else:
+                assert e.step in seen_started, (e, "terminal before STARTED")
+        run = await h
+        assert run.status in ("Succeeded", "Failed", "Cancelled"), run.status
+        assert evs[-1].status == run.status, (evs[-1], run.status)
+
+    async def _all():
+        await asyncio.wait_for(
+            asyncio.gather(*[one(i) for i in range(24)]), timeout=120)
+
+    try:
+        asyncio.run(_all())
+    except AssertionError as e:
+        print(f"FAIL gateway_events {e}")
+        return False
+    finally:
+        eng.close()
+    print("OK   gateway_events 24 runs, invariants held")
+    return True
+
+
 ok = cache_tier_sanity() and ok
+ok = gateway_event_sanity() and ok
 for aid in only:
     spec = get_arch(aid)
     cfg = reduced(spec.model).replace(param_dtype="float32",

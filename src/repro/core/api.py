@@ -235,9 +235,54 @@ def run(submitter=None, workflow_ir: Optional[WorkflowIR] = None,
     wf = workflow_ir or _wf()
     wf.validate()
     if submitter is None:
+        # throwaway engine: release its gateway loop + worker pool after
+        # the run instead of leaking one thread set per couler.run() call
         from repro.core.engines.local import LocalEngine
         submitter = LocalEngine()
+        try:
+            return submitter.submit(wf, optimize=optimize, **kw)
+        finally:
+            submitter.close()
     return submitter.submit(wf, optimize=optimize, **kw)
+
+
+async def run_async(submitter=None, workflow_ir: Optional[WorkflowIR] = None,
+                    optimize: bool = True, tenant: str = "default",
+                    priority: int = 0, **kw):
+    """Submit the current workflow through the async gateway path.
+
+    Returns an ``AsyncWorkflowRun``: ``await`` it for the finished
+    ``WorkflowRun``, iterate ``.events()`` for typed lifecycle events, or
+    ``.cancel()`` for cooperative cancellation. Admission is backpressured
+    per tenant — a full queue raises ``gateway.QueueFull`` (shed load)."""
+    wf = workflow_ir or _wf()
+    wf.validate()
+    if submitter is None:
+        from repro.core.engines.local import LocalEngine
+        submitter = LocalEngine()
+        handle = await submitter.submit_async(wf, optimize=optimize,
+                                              tenant=tenant,
+                                              priority=priority, **kw)
+        # throwaway engine: tear its gateway down once the run finishes
+        # (the callback fires on the gateway loop; stop() self-schedules)
+        handle._result.add_done_callback(lambda _f: submitter.close())
+        return handle
+    return await submitter.submit_async(wf, optimize=optimize, tenant=tenant,
+                                        priority=priority, **kw)
+
+
+async def stream(submitter=None, workflow_ir: Optional[WorkflowIR] = None,
+                 optimize: bool = True, tenant: str = "default",
+                 priority: int = 0, **kw):
+    """Async generator of gateway lifecycle events for the current
+    workflow: yields ``WorkflowEvent``s in order, ending with the single
+    terminal ``WORKFLOW_DONE`` (see ``repro.core.gateway`` for the
+    taxonomy)."""
+    handle = await run_async(submitter=submitter, workflow_ir=workflow_ir,
+                             optimize=optimize, tenant=tenant,
+                             priority=priority, **kw)
+    async for ev in handle.events():
+        yield ev
 
 
 def reset() -> None:

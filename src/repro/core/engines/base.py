@@ -6,9 +6,11 @@ steps whose status is Succeeded / Skipped / Cached (paper App. B.B).
 """
 from __future__ import annotations
 
+import asyncio
 import enum
 import json
 import time
+import uuid
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, List, Optional
@@ -46,6 +48,7 @@ class WorkflowRun:
     status: str = "Pending"
     wall_time_s: float = 0.0
     submitted: float = field(default_factory=time.time)
+    run_id: str = field(default_factory=lambda: uuid.uuid4().hex[:12])
 
     def succeeded(self) -> bool:
         return self.status == "Succeeded"
@@ -61,9 +64,13 @@ class WorkflowRun:
     def persist(self, db_dir: str = "out/workflow_db") -> Path:
         p = Path(db_dir)
         p.mkdir(parents=True, exist_ok=True)
-        f = p / f"{self.workflow.name}-{int(self.submitted)}.json"
+        # the run_id suffix keeps two runs of the same workflow within one
+        # second from overwriting each other — inevitable under concurrent
+        # gateway submission
+        f = p / f"{self.workflow.name}-{int(self.submitted)}-{self.run_id}.json"
         f.write_text(json.dumps({
             "workflow": self.workflow.name,
+            "run_id": self.run_id,
             "status": self.status,
             "wall_time_s": self.wall_time_s,
             "steps": {k: {"status": r.status.value, "attempts": r.attempts,
@@ -82,6 +89,39 @@ class Engine:
     def resume(self, run: WorkflowRun, **kw) -> WorkflowRun:
         """Restart from failure: re-submit, skipping Succeeded/Skipped/Cached."""
         raise NotImplementedError
+
+    async def submit_async(self, wf: WorkflowIR, optimize: bool = True,
+                           tenant: str = "default", priority: int = 0, **kw):
+        """Generic async adapter: run the blocking ``submit`` in a worker
+        thread and return an ``AsyncWorkflowRun`` handle. Only the coarse
+        ``WORKFLOW_ADMITTED`` / ``WORKFLOW_DONE`` events are emitted, and
+        cancellation is not cooperative mid-run. Engines with a native
+        async path (``LocalEngine``) override this with the gateway
+        implementation, which adds per-step events, backpressure, and
+        cooperative cancel."""
+        from repro.core.gateway.events import EventType
+        from repro.core.gateway.run import AsyncWorkflowRun
+        handle = AsyncWorkflowRun(wf.name, tenant=tenant)
+        handle._publish(EventType.WORKFLOW_ADMITTED)
+        loop = asyncio.get_running_loop()
+        # tenant maps onto the scheduler's user attribution (MultiCluster
+        # quotas/fairness); engines accepting neither ignore the extras
+        kw.setdefault("user", tenant)
+        kw.setdefault("priority", priority)
+
+        def work() -> None:
+            try:
+                run = self.submit(wf, optimize=optimize, **kw)
+                handle.run = run
+                handle._publish(EventType.WORKFLOW_DONE, status=run.status)
+                handle._finish(run)
+            except BaseException as e:  # noqa: BLE001
+                handle._publish(EventType.WORKFLOW_DONE, status="Failed",
+                                error=f"{type(e).__name__}: {e}")
+                handle._fail(e)
+
+        loop.run_in_executor(None, work)
+        return handle
 
 
 # The >20 abnormal cloud patterns the controller auto-retries (App. B.B).

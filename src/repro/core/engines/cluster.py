@@ -385,3 +385,37 @@ class MultiClusterEngine(Engine):
     def submit(self, wf: WorkflowIR, optimize: bool = True, user: str = "u0",
                priority: int = 0, **kw) -> WorkflowRun:
         return self.submit_many([(wf, user, priority)])[wf.name]
+
+    def submit_admitted(self, queue, max_n: Optional[int] = None
+                        ) -> Dict[str, WorkflowRun]:
+        """Drain a gateway ``AdmissionQueue`` (weighted-round-robin tenant
+        order) into one simulated batch: tenants map to scheduler users,
+        priorities pass through to the weighted queue, and any attached
+        async handles are finished with their runs (emitting the coarse
+        ``WORKFLOW_DONE``). This is the batch-scheduler consumer of the
+        same backpressured admission layer that feeds ``LocalEngine``.
+
+        Workflow names must be unique within the drained batch
+        (``submit_many`` keys its results by name); duplicates raise
+        ``ValueError`` instead of silently handing two submitters the
+        same run."""
+        from repro.core.gateway.events import EventType
+        items = queue.drain(max_n)
+        seen: Dict[str, str] = {}
+        for it in items:
+            if it.wf.name in seen:
+                raise ValueError(
+                    f"duplicate workflow name {it.wf.name!r} in admitted "
+                    f"batch (tenants {seen[it.wf.name]!r} and "
+                    f"{it.tenant!r}); submit_many results are keyed by "
+                    "name — rename or submit in separate batches")
+            seen[it.wf.name] = it.tenant
+        runs = self.submit_many([(it.wf, it.tenant, it.priority)
+                                 for it in items])
+        for it in items:
+            if it.handle is not None:
+                run = runs[it.wf.name]
+                it.handle.run = run
+                it.handle._publish(EventType.WORKFLOW_DONE, status=run.status)
+                it.handle._finish(run)
+        return runs

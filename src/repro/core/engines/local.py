@@ -1,4 +1,4 @@
-"""Local threaded DAG executor — the reference COULER engine.
+"""Local DAG executor — the reference COULER engine.
 
 Implements the production behaviours of App. B:
   * topological scheduling with a worker pool (max parallelism, Eq. 1 goal)
@@ -11,19 +11,29 @@ Implements the production behaviours of App. B:
     ``straggler_factor x est_time_s`` when spare workers exist
   * big-workflow auto-split (Algorithm 3) before scheduling
   * restart-from-failure: ``resume(run)`` skips Succeeded/Skipped/Cached
+
+Scheduling runs on the engine's ``WorkflowGateway``
+(``repro.core.gateway``): one asyncio loop drives the push-based
+completion callbacks for every in-flight workflow, sharing a single
+worker pool, a single thread-safe cache store, and a backpressured
+multi-tenant admission queue. ``submit``/``resume`` are thin sync facades
+(enqueue + wait) over that path; ``submit_async`` exposes it natively as
+an awaitable ``AsyncWorkflowRun`` with an event stream and cooperative
+cancel. Call ``close()`` to stop the gateway loop, its background cache
+promotion task, and the speculation executors.
 """
 from __future__ import annotations
 
+import asyncio
 import concurrent.futures as cf
 import hashlib
 import pickle
-import queue as queue_mod
 import threading
 import time
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional
 
 from repro.core.api import StepOutput
-from repro.core.autosplit import Budget, split_workflow
+from repro.core.autosplit import Budget
 from repro.core.caching import CacheStore, CoulerPolicy
 from repro.core.engines.base import (Engine, StepRecord, StepStatus,
                                      TransientError, WorkflowRun,
@@ -61,7 +71,11 @@ class LocalEngine(Engine):
                  budget: Optional[Budget] = None,
                  straggler_factor: float = 4.0,
                  retry_backoff_s: float = 0.02,
-                 enable_speculation: bool = True):
+                 enable_speculation: bool = True,
+                 max_inflight_steps: Optional[int] = None,
+                 max_inflight_workflows: Optional[int] = None,
+                 promote_interval_s: float = 0.25,
+                 admission=None):
         self.max_workers = max_workers
         self.cache = cache if cache is not None else CacheStore(
             capacity_bytes=1 << 30, policy=CoulerPolicy())
@@ -73,126 +87,84 @@ class LocalEngine(Engine):
         # across step invocations instead of constructing one per step
         self._spec_pools: List[cf.ThreadPoolExecutor] = []
         self._spec_lock = threading.Lock()
+        # asyncio submission gateway (lazily started on first submit)
+        self._gateway = None
+        self._gateway_lock = threading.Lock()
+        self._gateway_opts = dict(max_inflight_steps=max_inflight_steps,
+                                  max_inflight_workflows=max_inflight_workflows,
+                                  promote_interval_s=promote_interval_s,
+                                  admission=admission)
 
     # ------------------------------------------------------------------
-    def submit(self, wf: WorkflowIR, optimize: bool = True, **kw) -> WorkflowRun:
-        wf.validate()
-        run = WorkflowRun(workflow=wf)
-        for n in wf.jobs:
-            run.steps[n] = StepRecord()
-        if optimize:
-            parts = split_workflow(wf, self.budget)
-        else:
-            parts = [wf]
-        t0 = time.time()
-        ok = True
-        if len(parts) == 1:
-            ok = self._run_part(parts[0], run)
-        else:
-            # maximum parallelism (Eq. 1): independent parts of a wave run
-            # concurrently
-            from repro.core.autosplit import schedule_parts
-            waves = schedule_parts(wf, parts)
-            for wave in waves:
-                if not ok:
-                    break
-                if len(wave) == 1:
-                    ok = self._run_part(parts[wave[0]], run)
-                    continue
-                with cf.ThreadPoolExecutor(max_workers=len(wave)) as wp:
-                    futs = [wp.submit(self._run_part, parts[i], run)
-                            for i in wave]
-                    ok = all(f.result() for f in futs)
-        run.wall_time_s = time.time() - t0
-        run.status = "Succeeded" if ok else "Failed"
-        run.persist()
-        return run
+    @property
+    def gateway(self):
+        """The engine's ``WorkflowGateway`` (created on first access)."""
+        gw = self._gateway
+        if gw is None:
+            with self._gateway_lock:
+                if self._gateway is None:
+                    from repro.core.gateway import WorkflowGateway
+                    self._gateway = WorkflowGateway(self,
+                                                    **self._gateway_opts)
+                gw = self._gateway
+        return gw
 
-    def resume(self, run: WorkflowRun, **kw) -> WorkflowRun:
+    def submit(self, wf: WorkflowIR, optimize: bool = True,
+               tenant: str = "default", priority: int = 0,
+               **kw) -> WorkflowRun:
+        """Sync facade: enqueue on the gateway (blocking for queue space
+        instead of shedding) and wait for the finished ``WorkflowRun``."""
+        handle = self.gateway.submit_nowait(wf, optimize=optimize,
+                                            tenant=tenant, priority=priority,
+                                            block=True)
+        return handle.result()
+
+    async def submit_async(self, wf: WorkflowIR, optimize: bool = True,
+                           tenant: str = "default", priority: int = 0,
+                           block: bool = False, **kw):
+        """Native async path: admit ``wf`` into the gateway and return its
+        ``AsyncWorkflowRun`` (await it, stream ``.events()``, or
+        ``.cancel()``). Raises ``QueueFull`` when the tenant's admission
+        queue is at capacity; ``block=True`` waits for space instead (the
+        blocking offer parks on the queue's condition variable in a
+        worker thread — no polling)."""
+        from repro.core.gateway import QueueFull
+        gw = self.gateway
+        try:
+            # fast path: space available, no executor hop
+            return gw.submit_nowait(wf, optimize=optimize, tenant=tenant,
+                                    priority=priority)
+        except QueueFull:
+            if not block:
+                raise
+        return await asyncio.get_running_loop().run_in_executor(
+            None, lambda: gw.submit_nowait(wf, optimize=optimize,
+                                           tenant=tenant, priority=priority,
+                                           block=True))
+
+    def resume(self, run: WorkflowRun, tenant: str = "default",
+               **kw) -> WorkflowRun:
         """Restart from failure (App. B.B): steps already Succeeded, Skipped
         or Cached keep their artifacts; Failed/Pending steps re-run."""
-        wf = run.workflow
         keep = {StepStatus.SUCCEEDED, StepStatus.SKIPPED, StepStatus.CACHED}
         for n, rec in run.steps.items():
             if rec.status not in keep:
                 run.steps[n] = StepRecord()
-        t0 = time.time()
-        ok = self._run_part(wf, run)
-        run.wall_time_s += time.time() - t0
-        run.status = "Succeeded" if ok else "Failed"
-        run.persist()
-        return run
+        handle = self.gateway.submit_nowait(run.workflow, run=run,
+                                            resume=True, tenant=tenant,
+                                            block=True)
+        return handle.result()
 
-    # ------------------------------------------------------------------
-    def _run_part(self, wf: WorkflowIR, run: WorkflowRun) -> bool:
-        """Push-based completion scheduling: per-job indegree counters are
-        decremented by completion callbacks, so each finished step costs
-        O(out-degree) instead of an O(V·E) full ready-rescan, and the main
-        thread blocks on a completion queue (no polling timeout)."""
-        self.cache.attach_workflow(run.workflow)
-        satisfied = (StepStatus.SUCCEEDED, StepStatus.SKIPPED,
-                     StepStatus.CACHED)
-        done: Set[str] = {n for n, r in run.steps.items()
-                          if n in wf.jobs and r.status in satisfied}
-        total = len(wf.jobs)
-        if len(done) >= total:
-            return True
-        failed = False
-        completions: "queue_mod.SimpleQueue" = queue_mod.SimpleQueue()
-
-        # remaining unsatisfied dependencies per not-yet-done job; a pred
-        # outside this part that is not already satisfied never resolves
-        # here, which (as before) leaves the job pending and ends the part
-        indeg: Dict[str, int] = {}
-        ready: List[str] = []
-        for n in wf.jobs:
-            if n in done:
-                continue
-            k = 0
-            for p in run.workflow.predecessors(n):
-                if p not in wf.jobs and p not in run.steps:
-                    continue
-                rec = run.steps.get(p)
-                if rec is not None and rec.status in satisfied:
-                    continue
-                k += 1
-            indeg[n] = k
-            if k == 0:
-                ready.append(n)
-
-        with cf.ThreadPoolExecutor(max_workers=self.max_workers) as pool:
-            inflight = 0
-
-            def launch(name: str) -> None:
-                fut = pool.submit(self._exec_step, wf.jobs[name], run)
-                fut.add_done_callback(
-                    lambda f, n=name: completions.put((n, f)))
-
-            for n in ready:
-                launch(n)
-                inflight += 1
-            while inflight:
-                n, f = completions.get()
-                inflight -= 1
-                try:
-                    status = f.result()
-                except Exception as e:  # noqa: BLE001
-                    status = StepStatus.FAILED
-                    run.steps[n].error = f"{type(e).__name__}: {e}"
-                    run.steps[n].status = status
-                if status == StepStatus.FAILED:
-                    failed = True
-                    break               # pool __exit__ drains running steps
-                done.add(n)
-                if len(done) >= total:
-                    break
-                for s in run.workflow.successors(n):
-                    if s in indeg:
-                        indeg[s] -= 1
-                        if indeg[s] == 0:
-                            launch(s)
-                            inflight += 1
-        return not failed
+    def close(self) -> None:
+        """Shut down the gateway loop (stopping the background cache
+        promotion task cleanly) and the speculation executors."""
+        gw = self._gateway
+        if gw is not None:
+            gw.stop()
+        with self._spec_lock:
+            pools, self._spec_pools = self._spec_pools, []
+        for p in pools:
+            p.shutdown(wait=False)
 
     # ------------------------------------------------------------------
     def _exec_step(self, job: Job, run: WorkflowRun) -> StepStatus:
@@ -206,8 +178,9 @@ class LocalEngine(Engine):
             rec.end = time.time()
             return rec.status
 
-        # cache check (Algorithm 2 consumer side)
-        key = cache_key(job, run.artifacts)
+        # cache check (Algorithm 2 consumer side); non-cacheable steps skip
+        # the key hash entirely (it is only ever used for get/offer)
+        key = cache_key(job, run.artifacts) if job.cacheable else ""
         if job.cacheable:
             hit = self.cache.get(key)
             if hit is not None:

@@ -1,0 +1,52 @@
+"""Async workflow gateway: asyncio submission layer between the user API
+and the engines.
+
+The gateway multiplexes thousands of concurrent workflows onto shared
+executor resources: one event loop, one step worker pool, one (thread-safe)
+artifact store, and one backpressured multi-tenant admission queue per
+``LocalEngine``. ``couler.run_async`` / ``couler.stream`` and
+``Engine.submit_async`` are the user-facing entry points;
+``LocalEngine.submit`` is a thin sync facade over the same path.
+
+Event taxonomy
+--------------
+Every run's event stream (``AsyncWorkflowRun.events()``) is a totally
+ordered sequence of ``WorkflowEvent``s:
+
+``WORKFLOW_ADMITTED``
+    The submission passed the backpressure gate (per-tenant bounded queue;
+    a full queue sheds load with ``QueueFull`` instead). Always the first
+    event (``seq == 0``).
+``STEP_STARTED``
+    A step acquired an in-flight slot and was handed to the worker pool.
+``STEP_SUCCEEDED`` / ``STEP_CACHED`` / ``STEP_SKIPPED`` / ``STEP_FAILED``
+    The step's terminal status: executed, served from the artifact store
+    (Algorithm 2 consumer side), skipped by its ``couler.when`` condition,
+    or failed after exhausting the transient-error retry budget. Always
+    preceded by that step's ``STEP_STARTED``.
+``WORKFLOW_DONE``
+    Terminal; exactly one per run, always last, with ``status`` in
+    ``{"Succeeded", "Failed", "Cancelled"}``. A cancelled run keeps its
+    unlaunched steps ``Pending`` and is resumable via ``engine.resume``.
+
+Invariants (pinned by ``tests/test_gateway.py`` and the event-ordering
+fuzz in ``scripts/sanity.py``):
+
+1. ``WORKFLOW_ADMITTED`` precedes every ``STEP_*`` event.
+2. Exactly one terminal event per run, and nothing follows it.
+3. Every ``STEP_SUCCEEDED/CACHED/SKIPPED/FAILED`` is preceded by its own
+   ``STEP_STARTED``.
+
+The generic ``Engine.submit_async`` fallback (engines without a native
+async path, e.g. ``MultiClusterEngine`` or the YAML generators) emits only
+the coarse pair ``WORKFLOW_ADMITTED`` / ``WORKFLOW_DONE``.
+"""
+from repro.core.gateway.admission import (AdmissionQueue, AdmittedItem,
+                                          QueueFull)
+from repro.core.gateway.events import STEP_EVENTS, EventType, WorkflowEvent
+from repro.core.gateway.gateway import WorkflowGateway
+from repro.core.gateway.run import AsyncWorkflowRun
+
+__all__ = ["AdmissionQueue", "AdmittedItem", "QueueFull", "EventType",
+           "STEP_EVENTS", "WorkflowEvent", "WorkflowGateway",
+           "AsyncWorkflowRun"]

@@ -1,0 +1,182 @@
+"""Backpressured multi-tenant admission queue (weighted round-robin).
+
+Each tenant gets a bounded FIFO; ``offer`` sheds load with ``QueueFull``
+when the tenant's queue (or the global bound) is at capacity — or blocks
+until space frees when ``block=True`` (the sync facade's choice, so plain
+``submit()`` never sheds). ``pop``/``drain`` serve tenants by classic
+weighted round-robin: up to ``weight`` items from the current tenant, then
+rotate — a tenant flooding its queue cannot starve the others.
+
+The queue is plain-threading (no asyncio), so the same instance can feed
+the asyncio ``WorkflowGateway`` pump *and* a batch scheduler
+(``MultiClusterEngine.submit_admitted`` drains it into ``submit_many``).
+
+The ``WORKFLOW_ADMITTED`` event is published under the queue lock, before
+the item becomes poppable, so it always precedes any ``STEP_*`` event of
+that run.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, TYPE_CHECKING
+
+from repro.core.gateway.events import EventType
+from repro.core.ir import WorkflowIR
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.core.gateway.run import AsyncWorkflowRun
+
+
+class QueueFull(RuntimeError):
+    """Shed-load signal: the tenant's (or the global) queue is full."""
+
+    def __init__(self, tenant: str, depth: int, limit: int):
+        super().__init__(f"admission queue full for tenant {tenant!r}: "
+                         f"depth={depth} limit={limit}")
+        self.tenant = tenant
+        self.depth = depth
+        self.limit = limit
+
+
+@dataclass
+class AdmittedItem:
+    """One queued submission (workflow + tenant metadata + optional async
+    handle for lifecycle events)."""
+
+    wf: WorkflowIR
+    tenant: str = "default"
+    priority: int = 0
+    optimize: bool = True
+    resume: bool = False
+    handle: Optional["AsyncWorkflowRun"] = None
+    offered_at: float = field(default_factory=time.time)
+
+
+class AdmissionQueue:
+    """Bounded per-tenant queues drained in weighted round-robin order."""
+
+    def __init__(self, max_depth_per_tenant: int = 1024,
+                 max_total: int = 8192,
+                 weights: Optional[Dict[str, int]] = None,
+                 default_weight: int = 1):
+        self.max_depth_per_tenant = max_depth_per_tenant
+        self.max_total = max_total
+        self.weights = dict(weights or {})
+        self.default_weight = max(1, default_weight)
+        self._cv = threading.Condition()
+        self._queues: Dict[str, Deque[AdmittedItem]] = {}
+        self._ring: Deque[str] = deque()   # active tenants, WRR order
+        self._credit = 0                   # remaining serves for ring[0]
+        self._total = 0
+        self._listeners: List[Callable[[], None]] = []
+        self.stats = {"offered": 0, "shed": 0, "popped": 0}
+
+    # -- producer side -----------------------------------------------------
+    def add_listener(self, cb: Callable[[], None]) -> None:
+        """Register a callback fired (outside the lock) after each
+        successful offer — the gateway uses this to wake its pump."""
+        with self._cv:
+            self._listeners.append(cb)
+
+    def offer(self, item: AdmittedItem, block: bool = False,
+              timeout: Optional[float] = None) -> None:
+        """Enqueue ``item`` or raise ``QueueFull``. With ``block=True``,
+        wait (up to ``timeout``) for space instead of shedding."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                depth = len(self._queues.get(item.tenant, ()))
+                if (depth < self.max_depth_per_tenant
+                        and self._total < self.max_total):
+                    break
+                if not block:
+                    self.stats["shed"] += 1
+                    raise QueueFull(item.tenant, depth,
+                                    self.max_depth_per_tenant)
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    self.stats["shed"] += 1
+                    raise QueueFull(item.tenant, depth,
+                                    self.max_depth_per_tenant)
+                if not self._cv.wait(remaining):
+                    self.stats["shed"] += 1
+                    raise QueueFull(item.tenant, depth,
+                                    self.max_depth_per_tenant)
+            if item.handle is not None:
+                # under the lock, before the item is poppable: ADMITTED
+                # is guaranteed to precede every STEP_* of this run
+                item.handle._publish(EventType.WORKFLOW_ADMITTED)
+            if item.tenant not in self._queues:
+                self._queues[item.tenant] = deque()
+                self._ring.append(item.tenant)
+            self._queues[item.tenant].append(item)
+            self._total += 1
+            self.stats["offered"] += 1
+            listeners = list(self._listeners)
+        for cb in listeners:
+            cb()
+
+    def try_offer(self, item: AdmittedItem) -> bool:
+        try:
+            self.offer(item)
+            return True
+        except QueueFull:
+            return False
+
+    # -- consumer side (WRR) -----------------------------------------------
+    def pop(self) -> Optional[AdmittedItem]:
+        with self._cv:
+            return self._pop_locked()
+
+    def drain(self, max_n: Optional[int] = None) -> List[AdmittedItem]:
+        """Pop up to ``max_n`` items (all, if None) in WRR order."""
+        out: List[AdmittedItem] = []
+        with self._cv:
+            while max_n is None or len(out) < max_n:
+                item = self._pop_locked()
+                if item is None:
+                    break
+                out.append(item)
+        return out
+
+    def _pop_locked(self) -> Optional[AdmittedItem]:
+        while self._ring:
+            t = self._ring[0]
+            q = self._queues.get(t)
+            if not q:
+                self._ring.popleft()
+                self._queues.pop(t, None)
+                self._credit = 0
+                continue
+            if self._credit <= 0:
+                self._credit = max(1, int(self.weights.get(
+                    t, self.default_weight)))
+            item = q.popleft()
+            self._total -= 1
+            self._credit -= 1
+            if not q:                       # tenant drained: leave the ring
+                self._ring.popleft()
+                self._queues.pop(t, None)
+                self._credit = 0
+            elif self._credit <= 0:         # served its weight: next tenant
+                self._ring.rotate(-1)
+            self.stats["popped"] += 1
+            self._cv.notify_all()           # space freed: wake blocked offers
+            return item
+        return None
+
+    # -- introspection -----------------------------------------------------
+    def depth(self, tenant: str) -> int:
+        with self._cv:
+            return len(self._queues.get(tenant, ()))
+
+    def tenants(self) -> List[str]:
+        with self._cv:
+            return list(self._ring)
+
+    def __len__(self) -> int:
+        return self._total

@@ -1,0 +1,55 @@
+"""Typed lifecycle events emitted by the workflow gateway.
+
+See ``repro.core.gateway`` (package docstring) for the full taxonomy and
+the ordering invariants every event stream satisfies.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class EventType(str, enum.Enum):
+    """Lifecycle event kinds, in the order they may appear in a stream."""
+
+    WORKFLOW_ADMITTED = "WORKFLOW_ADMITTED"   # passed the backpressure gate
+    STEP_STARTED = "STEP_STARTED"             # step handed to the worker pool
+    STEP_SUCCEEDED = "STEP_SUCCEEDED"
+    STEP_CACHED = "STEP_CACHED"               # outputs served from the store
+    STEP_SKIPPED = "STEP_SKIPPED"             # couler.when condition false
+    STEP_FAILED = "STEP_FAILED"
+    WORKFLOW_DONE = "WORKFLOW_DONE"           # terminal; exactly one per run
+
+
+STEP_EVENTS = frozenset({EventType.STEP_STARTED, EventType.STEP_SUCCEEDED,
+                         EventType.STEP_CACHED, EventType.STEP_SKIPPED,
+                         EventType.STEP_FAILED})
+
+
+@dataclass(frozen=True)
+class WorkflowEvent:
+    """One lifecycle event of one run.
+
+    ``seq`` is a per-run monotonic counter (0 is always the admission
+    event); ``status`` carries the step status for STEP_* events and the
+    terminal run status ("Succeeded"/"Failed"/"Cancelled") for
+    WORKFLOW_DONE.
+    """
+
+    type: EventType
+    workflow: str
+    run_id: str
+    tenant: str = "default"
+    step: str = ""
+    status: str = ""
+    error: str = ""
+    seq: int = -1
+    ts: float = 0.0
+
+    @property
+    def terminal(self) -> bool:
+        return self.type is EventType.WORKFLOW_DONE
+
+    @property
+    def is_step_event(self) -> bool:
+        return self.type in STEP_EVENTS

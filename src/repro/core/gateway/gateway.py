@@ -1,0 +1,396 @@
+"""``WorkflowGateway`` — asyncio submission layer over a ``LocalEngine``.
+
+One gateway owns one event loop (a daemon thread), one shared step worker
+pool, one admission queue, and (for multi-tier caches) one background
+promotion task. Every in-flight workflow of the engine is multiplexed onto
+these shared resources:
+
+* the **pump** coroutine drains the admission queue in weighted
+  round-robin tenant order and spawns one lightweight task per workflow
+  (no per-run threads);
+* each workflow task replays the engine's push-based completion
+  scheduling as coroutines: ready steps become asyncio tasks that execute
+  ``LocalEngine._exec_step`` on the shared pool, and each completion
+  decrements successor indegrees exactly as the sync scheduler did;
+* a global ``max_inflight_steps`` semaphore bounds how many steps of ALL
+  workflows may execute at once (backpressure below the admission gate);
+* ``promote_interval_s`` drives ``TieredCacheStore.promote()`` from a
+  real background task (the store's ``auto_promote_every`` hit-count
+  trigger remains as a fallback for engines without a gateway);
+* ``stop()`` cancels the background tasks, drains the loop, and joins the
+  thread — ``LocalEngine.close()`` calls it on engine shutdown.
+
+The sync facade (``LocalEngine.submit``) funnels through this same path
+(``submit_nowait(block=True)`` + ``handle.result()``), so sync and async
+submissions produce identical ``WorkflowRun`` results.
+
+Caveats: ``submit()`` called *from inside a step function* of the same
+engine occupies a pool worker while it waits; deeply nested blocking
+submissions can exhaust the pool — nest with ``submit_async`` instead.
+And the shared store's Couler policy scores against one attached
+workflow at a time, so interleaved workflows re-attach per part —
+thread-safe, but admission scores reflect the most recently attached
+DAG and each switch drops the scorer's memo (see the ROADMAP
+"multi-workflow cache scoring context" open item).
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures as cf
+import threading
+import time
+from typing import Dict, List, Optional, Set
+
+from repro.core.autosplit import schedule_parts, split_workflow
+from repro.core.engines.base import StepRecord, StepStatus, WorkflowRun
+from repro.core.gateway.admission import AdmissionQueue, AdmittedItem
+from repro.core.gateway.events import EventType
+from repro.core.gateway.run import AsyncWorkflowRun
+from repro.core.ir import WorkflowIR
+
+_EVENT_FOR_STATUS = {
+    StepStatus.SUCCEEDED: EventType.STEP_SUCCEEDED,
+    StepStatus.CACHED: EventType.STEP_CACHED,
+    StepStatus.SKIPPED: EventType.STEP_SKIPPED,
+    StepStatus.FAILED: EventType.STEP_FAILED,
+}
+
+
+class WorkflowGateway:
+    """Asyncio-driven submission gateway; see module docstring."""
+
+    def __init__(self, engine, max_workers: Optional[int] = None,
+                 max_inflight_steps: Optional[int] = None,
+                 max_inflight_workflows: Optional[int] = None,
+                 admission: Optional[AdmissionQueue] = None,
+                 promote_interval_s: float = 0.25):
+        self.engine = engine
+        self.max_workers = max_workers or getattr(engine, "max_workers", 8)
+        self.max_inflight_steps = (max_inflight_steps
+                                   if max_inflight_steps
+                                   else 2 * self.max_workers)
+        self.max_inflight_workflows = max_inflight_workflows
+        self.admission = admission if admission is not None else \
+            AdmissionQueue()
+        self.promote_interval_s = promote_interval_s
+        self.stats = {"submitted": 0, "completed": 0, "failed": 0,
+                      "cancelled": 0, "peak_inflight_steps": 0}
+        self._inflight_steps = 0
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._pool: Optional[cf.ThreadPoolExecutor] = None
+        self._step_sem: Optional[asyncio.Semaphore] = None
+        self._wf_sem: Optional[asyncio.Semaphore] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._pump_task: Optional[asyncio.Task] = None
+        self._promote_task: Optional[asyncio.Task] = None
+        self._wf_tasks: Set[asyncio.Task] = set()
+        self._start_lock = threading.Lock()
+        self._started = threading.Event()
+        self._closed = False
+        self.admission.add_listener(self._on_offer)
+
+    # -- lifecycle ---------------------------------------------------------
+    def ensure_started(self) -> None:
+        if self._started.is_set():
+            return
+        with self._start_lock:
+            if self._started.is_set():
+                return
+            if self._closed:
+                raise RuntimeError("gateway is closed")
+            self._thread = threading.Thread(
+                target=self._loop_main, daemon=True,
+                name=f"wf-gateway-{id(self):x}")
+            self._thread.start()
+        self._started.wait()
+
+    def _loop_main(self) -> None:
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+        self._pool = cf.ThreadPoolExecutor(
+            max_workers=self.max_workers, thread_name_prefix="gateway-step")
+        self._step_sem = asyncio.Semaphore(self.max_inflight_steps)
+        if self.max_inflight_workflows:
+            self._wf_sem = asyncio.Semaphore(self.max_inflight_workflows)
+        self._wake = asyncio.Event()
+        self._pump_task = loop.create_task(self._pump())
+        if self.promote_interval_s and self._cache_promotable():
+            self._promote_task = loop.create_task(self._promote_loop())
+        self._started.set()
+        try:
+            loop.run_forever()
+        finally:
+            loop.close()
+
+    def _cache_promotable(self) -> bool:
+        cache = getattr(self.engine, "cache", None)
+        tiers = getattr(cache, "tiers", None)
+        return callable(getattr(cache, "promote", None)) \
+            and tiers is not None and len(tiers) > 1
+
+    def stop(self, wait: bool = True, timeout: float = 10.0) -> None:
+        """Cancel the pump/promotion/workflow tasks, stop the loop, join
+        the thread, and release the worker pool. Idempotent."""
+        with self._start_lock:
+            self._closed = True
+            loop, thread = self._loop, self._thread
+        if loop is None or not self._started.is_set():
+            return
+
+        def _begin_shutdown() -> None:
+            loop.create_task(self._shutdown())
+
+        try:
+            loop.call_soon_threadsafe(_begin_shutdown)
+        except RuntimeError:              # loop already closed
+            return
+        if wait and thread is not None \
+                and thread is not threading.current_thread():
+            thread.join(timeout)
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+
+    async def _shutdown(self) -> None:
+        # sweep until quiescent: workflow tasks spawn step tasks, and a
+        # step completing mid-sweep may spawn successors
+        cur = asyncio.current_task()
+        while True:
+            rest = [t for t in asyncio.all_tasks()
+                    if t is not cur and not t.done()]
+            if not rest:
+                break
+            for t in rest:
+                t.cancel()
+            await asyncio.gather(*rest, return_exceptions=True)
+        asyncio.get_running_loop().stop()
+
+    # -- submission (thread-safe; callable from any thread) ----------------
+    def submit_nowait(self, wf: WorkflowIR, optimize: bool = True,
+                      tenant: str = "default", priority: int = 0,
+                      run: Optional[WorkflowRun] = None,
+                      resume: bool = False,
+                      block: bool = False) -> AsyncWorkflowRun:
+        """Validate + enqueue one workflow; returns its handle immediately.
+        Raises ``QueueFull`` when the tenant's queue is at capacity (pass
+        ``block=True`` to wait for space instead — the sync facade does)."""
+        if self._closed:
+            raise RuntimeError("gateway is closed")
+        self.ensure_started()
+        if run is None:
+            wf.validate()
+            run = WorkflowRun(workflow=wf)
+            for n in wf.jobs:
+                run.steps[n] = StepRecord()
+        handle = AsyncWorkflowRun(wf.name, run=run, tenant=tenant)
+        item = AdmittedItem(wf=wf, tenant=tenant, priority=priority,
+                            optimize=optimize, resume=resume, handle=handle)
+        self.admission.offer(item, block=block)
+        return handle
+
+    def _on_offer(self) -> None:
+        loop, wake = self._loop, self._wake
+        if loop is None or wake is None or self._closed:
+            return
+        try:
+            loop.call_soon_threadsafe(wake.set)
+        except RuntimeError:
+            pass
+
+    # -- pump: admission queue -> workflow tasks ---------------------------
+    async def _pump(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            item = self.admission.pop()
+            if item is None:
+                self._wake.clear()
+                if len(self.admission) == 0:
+                    await self._wake.wait()
+                continue
+            if self._wf_sem is not None:
+                await self._wf_sem.acquire()
+            task = loop.create_task(self._run_workflow(item))
+            self._wf_tasks.add(task)
+            task.add_done_callback(self._wf_task_done)
+
+    def _wf_task_done(self, task: asyncio.Task) -> None:
+        self._wf_tasks.discard(task)
+        if self._wf_sem is not None:
+            self._wf_sem.release()
+
+    # -- per-workflow execution (mirrors LocalEngine's sync scheduler) -----
+    async def _run_workflow(self, item: AdmittedItem) -> None:
+        handle = item.handle
+        run = handle.run
+        eng = self.engine
+        self.stats["submitted"] += 1
+        loop = asyncio.get_running_loop()
+        try:
+            if handle.cancel_requested:       # cancelled while queued
+                run.status = "Cancelled"
+                self.stats["cancelled"] += 1
+                handle._publish(EventType.WORKFLOW_DONE, status=run.status)
+                handle._finish(run)
+                return
+            wf = run.workflow
+            t0 = time.time()
+            if item.optimize and not item.resume:
+                parts = split_workflow(wf, eng.budget)
+            else:
+                parts = [wf]
+            ok = True
+            if len(parts) == 1:
+                ok = await self._run_part(parts[0], run, handle)
+            else:
+                # maximum parallelism (Eq. 1): independent parts of a wave
+                # run concurrently, waves in dependency order
+                waves = schedule_parts(wf, parts)
+                for wave in waves:
+                    if not ok:
+                        break
+                    results = await asyncio.gather(
+                        *(self._run_part(parts[i], run, handle)
+                          for i in wave))
+                    ok = all(results)
+            dt = time.time() - t0
+            run.wall_time_s = run.wall_time_s + dt if item.resume else dt
+            if not ok:
+                run.status = "Failed"
+                self.stats["failed"] += 1
+            elif handle.cancel_requested and any(
+                    r.status == StepStatus.PENDING
+                    for r in run.steps.values()):
+                run.status = "Cancelled"
+                self.stats["cancelled"] += 1
+            else:
+                run.status = "Succeeded"
+                self.stats["completed"] += 1
+            await loop.run_in_executor(self._pool, run.persist)
+            handle._publish(EventType.WORKFLOW_DONE, status=run.status)
+            handle._finish(run)
+        except asyncio.CancelledError:
+            run.status = "Cancelled"
+            handle._publish(EventType.WORKFLOW_DONE, status=run.status)
+            handle._finish(run)
+            raise
+        except Exception as e:  # noqa: BLE001 — internal error, not a step
+            run.status = "Failed"
+            self.stats["failed"] += 1
+            handle._publish(EventType.WORKFLOW_DONE, status="Failed",
+                            error=f"{type(e).__name__}: {e}")
+            handle._fail(e)
+
+    async def _run_part(self, wfp: WorkflowIR, run: WorkflowRun,
+                        handle: AsyncWorkflowRun) -> bool:
+        """Asyncio port of ``LocalEngine._run_part``: per-job indegree
+        counters decremented on completion, each finished step costing
+        O(out-degree); steps execute on the SHARED pool gated by the
+        global in-flight-steps semaphore."""
+        eng = self.engine
+        eng.cache.attach_workflow(run.workflow)
+        satisfied = (StepStatus.SUCCEEDED, StepStatus.SKIPPED,
+                     StepStatus.CACHED)
+        done: Set[str] = {n for n, r in run.steps.items()
+                          if n in wfp.jobs and r.status in satisfied}
+        total = len(wfp.jobs)
+        if len(done) >= total:
+            return True
+        # remaining unsatisfied dependencies per not-yet-done job; a pred
+        # outside this part that is not already satisfied never resolves
+        # here, which leaves the job pending and ends the part
+        indeg: Dict[str, int] = {}
+        ready: List[str] = []
+        for n in wfp.jobs:
+            if n in done:
+                continue
+            k = 0
+            for p in run.workflow.predecessors(n):
+                if p not in wfp.jobs and p not in run.steps:
+                    continue
+                rec = run.steps.get(p)
+                if rec is not None and rec.status in satisfied:
+                    continue
+                k += 1
+            indeg[n] = k
+            if k == 0:
+                ready.append(n)
+
+        loop = asyncio.get_running_loop()
+        # completion handling is inlined at the tail of each step task (the
+        # loop is single-threaded, so no locking): each finished step costs
+        # O(out-degree) with no waiter re-registration — the part coroutine
+        # only awaits one future resolved when the outstanding count drains
+        state = {"failed": False, "outstanding": 0}
+        part_done: asyncio.Future = loop.create_future()
+
+        def finish_one(name: str, status: Optional[StepStatus]) -> None:
+            if status is not None:
+                if status == StepStatus.FAILED:
+                    state["failed"] = True      # in-flight steps drain out
+                else:
+                    done.add(name)
+                    if not state["failed"] and not handle.cancel_requested:
+                        for s in run.workflow.successors(name):
+                            if s in indeg and s not in done:
+                                indeg[s] -= 1
+                                if indeg[s] == 0:
+                                    spawn(s)
+            state["outstanding"] -= 1
+            if state["outstanding"] == 0 and not part_done.done():
+                part_done.set_result(None)
+
+        async def exec_one(name: str) -> None:
+            status: Optional[StepStatus] = None
+            try:
+                async with self._step_sem:
+                    if handle.cancel_requested:
+                        return              # never launched: stays Pending
+                    handle._publish(EventType.STEP_STARTED, step=name)
+                    self._inflight_steps += 1
+                    if self._inflight_steps > \
+                            self.stats["peak_inflight_steps"]:
+                        self.stats["peak_inflight_steps"] = \
+                            self._inflight_steps
+                    try:
+                        status = await loop.run_in_executor(
+                            self._pool, eng._exec_step, wfp.jobs[name], run)
+                    except Exception as e:  # noqa: BLE001
+                        rec = run.steps[name]
+                        rec.error = f"{type(e).__name__}: {e}"
+                        rec.status = StepStatus.FAILED
+                        status = StepStatus.FAILED
+                    finally:
+                        self._inflight_steps -= 1
+                    handle._publish(
+                        _EVENT_FOR_STATUS.get(status, EventType.STEP_FAILED),
+                        step=name, status=status.value,
+                        error=run.steps[name].error)
+            finally:
+                finish_one(name, status)
+
+        def spawn(name: str) -> None:
+            state["outstanding"] += 1
+            loop.create_task(exec_one(name))
+
+        for n in ready:
+            spawn(n)
+        if state["outstanding"]:
+            await part_done
+        return not state["failed"]
+
+    # -- background cache promotion ---------------------------------------
+    async def _promote_loop(self) -> None:
+        """Drive ``TieredCacheStore.promote()`` periodically so hot
+        artifacts climb toward MEM without relying on the hit-count
+        trigger. Cancellation (engine shutdown) exits cleanly."""
+        loop = asyncio.get_running_loop()
+        while True:
+            await asyncio.sleep(self.promote_interval_s)
+            try:
+                await loop.run_in_executor(self._pool,
+                                           self.engine.cache.promote)
+            except RuntimeError:   # pool shut down mid-flight
+                return
+            except Exception:  # noqa: BLE001 — promotion is advisory
+                pass

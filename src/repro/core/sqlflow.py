@@ -168,6 +168,12 @@ def to_workflow(sql: str, name: str = "sqlflow",
 def run_sql(sql: str, engine=None, model_registry: Optional[Dict] = None):
     """Parse, lower and execute one statement; returns the WorkflowRun."""
     from repro.core.engines.local import LocalEngine
-    engine = engine or LocalEngine()
     ir = to_workflow(sql, model_registry=model_registry)
+    if engine is None:
+        # throwaway engine: release its gateway threads after the run
+        engine = LocalEngine()
+        try:
+            return engine.submit(ir)
+        finally:
+            engine.close()
     return engine.submit(ir)

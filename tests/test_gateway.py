@@ -1,0 +1,482 @@
+"""Async workflow gateway: event streams, cancellation, backpressure,
+multi-tenant fairness, background promotion, and the sync facade.
+
+Pins the package's documented invariants (repro/core/gateway/__init__.py):
+ADMITTED first, exactly one terminal WORKFLOW_DONE last, STEP_* terminal
+events preceded by their own STEP_STARTED; cancel mid-flight leaves a
+resumable run; >=200 concurrent submit_async calls share one
+TieredCacheStore with the in-flight step bound enforced.
+"""
+import asyncio
+import threading
+import time
+
+import pytest
+
+from repro.core import couler
+from repro.core.cache import (CacheTier, CoulerPolicy, TieredCacheStore,
+                              mem_spec, remote_spec, ssd_spec)
+from repro.core.engines.base import StepStatus, WorkflowRun
+from repro.core.engines.cluster import Cluster, MultiClusterEngine
+from repro.core.engines.local import LocalEngine
+from repro.core.gateway import (AdmissionQueue, AdmittedItem, EventType,
+                                QueueFull)
+from repro.core.ir import Job, Resources, WorkflowIR
+
+
+def chain_wf(name, k=3, fns=None, sleep=0.0):
+    """k-step chain; fns overrides individual step callables."""
+    wf = WorkflowIR(name)
+    prev = None
+    for i in range(k):
+        def mk(i=i):
+            def fn(*a):
+                if sleep:
+                    time.sleep(sleep)
+                return i
+            return fn
+        fn = (fns or {}).get(i) or mk()
+        wf.add_job(Job(name=f"s{i}", fn=fn, cacheable=False,
+                       outputs=[f"s{i}:out"], retry_limit=0))
+        if prev is not None:
+            wf.add_edge(prev, f"s{i}")
+        prev = f"s{i}"
+    return wf
+
+
+def _engine(**kw):
+    kw.setdefault("enable_speculation", False)
+    kw.setdefault("promote_interval_s", 0.0)
+    return LocalEngine(**kw)
+
+
+# ---------------------------------------------------------------------------
+# awaitable handle + event-stream invariants
+# ---------------------------------------------------------------------------
+
+def test_await_returns_same_run_as_sync_submit():
+    eng = _engine(max_workers=2)
+
+    async def main():
+        h = await eng.submit_async(chain_wf("aw", 3))
+        run = await h
+        return h, run
+
+    h, run = asyncio.run(main())
+    assert run.succeeded()
+    assert h.run is run and h.done()
+    # sync facade produces identical statuses/artifacts on an equal workflow
+    run2 = eng.submit(chain_wf("aw2", 3))
+    assert {n: r.status for n, r in run.steps.items()} == \
+        {n: r.status for n, r in run2.steps.items()}
+    assert {k.split(":")[0]: v for k, v in run.artifacts.items()} == \
+        {k.split(":")[0]: v for k, v in run2.artifacts.items()}
+    eng.close()
+
+
+def _check_stream_invariants(evs):
+    assert evs, "empty event stream"
+    assert evs[0].type is EventType.WORKFLOW_ADMITTED
+    assert evs[0].seq == 0
+    assert evs[-1].terminal
+    assert sum(1 for e in evs if e.terminal) == 1
+    assert all(e.is_step_event for e in evs[1:-1])
+    started = set()
+    for e in evs[1:-1]:
+        if e.type is EventType.STEP_STARTED:
+            started.add(e.step)
+        else:
+            assert e.step in started, f"{e.type} before STEP_STARTED"
+    seqs = [e.seq for e in evs]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+def test_event_stream_ordering_success_and_failure():
+    eng = _engine(max_workers=2)
+
+    def boom():
+        raise ValueError("boom")
+
+    async def main():
+        h_ok = await eng.submit_async(chain_wf("ev-ok", 3))
+        h_bad = await eng.submit_async(chain_wf("ev-bad", 3, fns={1: boom}))
+        ev_ok = [e async for e in h_ok.events()]
+        ev_bad = [e async for e in h_bad.events()]
+        return h_ok, ev_ok, ev_bad, await h_ok, await h_bad
+
+    h_ok, ev_ok, ev_bad, run_ok, run_bad = asyncio.run(main())
+    _check_stream_invariants(ev_ok)
+    _check_stream_invariants(ev_bad)
+    assert ev_ok[-1].status == "Succeeded" and run_ok.succeeded()
+    assert ev_bad[-1].status == "Failed" and not run_bad.succeeded()
+    assert any(e.type is EventType.STEP_FAILED and e.step == "s1"
+               for e in ev_bad)
+    # s2 never launched -> no events for it, record stays Pending
+    assert not any(e.step == "s2" for e in ev_bad)
+    assert run_bad.steps["s2"].status == StepStatus.PENDING
+
+    # late subscription (fresh loop, run long finished) replays the
+    # identical, complete stream from history
+    async def late():
+        return [e async for e in h_ok.events()]
+
+    assert asyncio.run(late()) == ev_ok
+    eng.close()
+
+
+def test_step_cached_and_skipped_events():
+    eng = _engine(max_workers=2)
+    calls = {"n": 0}
+
+    def expensive():
+        calls["n"] += 1
+        return 42
+
+    def build(name):
+        wf = WorkflowIR(name)
+        wf.add_job(Job(name="big", fn=expensive, outputs=["big:out"],
+                       cacheable=True))
+        return wf
+
+    async def main():
+        h1 = await eng.submit_async(build("c1"))
+        await h1
+        h2 = await eng.submit_async(build("c2"))
+        return [e async for e in h2.events()], await h2
+
+    evs, run2 = asyncio.run(main())
+    assert calls["n"] == 1
+    assert run2.steps["big"].status == StepStatus.CACHED
+    assert any(e.type is EventType.STEP_CACHED and e.step == "big"
+               for e in evs)
+    _check_stream_invariants(evs)
+
+    # skipped-by-condition step emits STEP_SKIPPED
+    with couler.workflow("skipwf") as ir:
+        a = couler.run_step(lambda: "no", step_name="a", cacheable=False)
+        couler.when(couler.equal(a, "yes"),
+                    lambda: couler.run_step(lambda: 1, step_name="b",
+                                            cacheable=False))
+
+    async def main2():
+        h = await eng.submit_async(ir, optimize=False)
+        return [e async for e in h.events()], await h
+
+    evs2, run3 = asyncio.run(main2())
+    assert run3.succeeded()
+    assert run3.steps["b"].status == StepStatus.SKIPPED
+    assert any(e.type is EventType.STEP_SKIPPED and e.step == "b"
+               for e in evs2)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# cooperative cancellation -> resumable run
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_flight_leaves_resumable_run():
+    eng = _engine(max_workers=2)
+    gate = threading.Event()
+    counts = {0: 0, 1: 0, 2: 0, 3: 0}
+
+    def mk(i, wait=False):
+        def fn(*a):
+            counts[i] += 1
+            if wait:
+                assert gate.wait(10)
+            return i
+        return fn
+
+    wf = chain_wf("cxl", 4, fns={0: mk(0), 1: mk(1, wait=True),
+                                 2: mk(2), 3: mk(3)})
+
+    async def main():
+        h = await eng.submit_async(wf, optimize=False)
+        async for ev in h.events():
+            if ev.type is EventType.STEP_STARTED and ev.step == "s1":
+                # cancel while s1 is executing, THEN let it finish: the
+                # running step completes, s2/s3 must never launch
+                assert h.cancel()
+                gate.set()
+            if ev.terminal:
+                term = ev
+        return await h, term
+
+    run, term = asyncio.run(main())
+    assert term.status == "Cancelled" and run.status == "Cancelled"
+    assert run.steps["s0"].status == StepStatus.SUCCEEDED
+    assert run.steps["s1"].status == StepStatus.SUCCEEDED
+    assert run.steps["s2"].status == StepStatus.PENDING
+    assert run.steps["s3"].status == StepStatus.PENDING
+
+    run2 = eng.resume(run)
+    assert run2.succeeded()
+    assert counts[0] == 1 and counts[1] == 1      # not re-executed
+    assert counts[2] == 1 and counts[3] == 1      # ran exactly once now
+    eng.close()
+
+
+def test_cancel_while_queued_never_starts():
+    # one in-flight-step slot: h0's gate-blocked step holds it, so h1's
+    # first step is parked at the semaphore when the cancel lands -> it
+    # must observe the flag and never launch
+    eng = _engine(max_workers=2, max_inflight_steps=1)
+    gate = threading.Event()
+    wf_block = chain_wf("blk", 1, fns={0: lambda *a: gate.wait(10) and 0})
+
+    async def main():
+        h0 = await eng.submit_async(wf_block, optimize=False)
+        h1 = await eng.submit_async(chain_wf("q", 2), optimize=False)
+        h1.cancel()
+        gate.set()
+        r0, r1 = await h0, await h1
+        return r0, r1, [e async for e in h1.events()]
+
+    run0, run1, evs1 = asyncio.run(main())
+    assert run0.succeeded()
+    assert run1.status == "Cancelled"
+    assert all(r.status == StepStatus.PENDING for r in run1.steps.values())
+    assert not any(e.is_step_event for e in evs1)    # nothing ever started
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# backpressure + multi-tenant fairness
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_wrr_order_and_bounds():
+    q = AdmissionQueue(max_depth_per_tenant=4, max_total=16,
+                       weights={"A": 2, "B": 1})
+
+    def item(t, i):
+        return AdmittedItem(wf=WorkflowIR(f"{t}{i}"), tenant=t)
+
+    for i in range(4):
+        q.offer(item("A", i))
+    for i in range(2):
+        q.offer(item("B", i))
+    order = [it.wf.name for it in q.drain()]
+    assert order == ["A0", "A1", "B0", "A2", "A3", "B1"]   # classic WRR 2:1
+    assert len(q) == 0
+
+    for i in range(4):
+        q.offer(item("C", i))
+    with pytest.raises(QueueFull) as exc:
+        q.offer(item("C", 9))
+    assert exc.value.tenant == "C" and exc.value.depth == 4
+    assert q.try_offer(item("D", 0))        # other tenants unaffected
+    assert q.stats["shed"] == 1
+
+
+def test_gateway_sheds_load_when_tenant_queue_full():
+    # one workflow slot: the gate-blocked run pins the pump, so later
+    # offers pile into tenant T's depth-2 queue and overflow sheds
+    gate = threading.Event()
+    eng = _engine(max_workers=2, max_inflight_workflows=1,
+                  admission=AdmissionQueue(max_depth_per_tenant=2,
+                                           max_total=64))
+
+    async def main():
+        h0 = await eng.submit_async(
+            chain_wf("full-0", 1, fns={0: lambda *a: gate.wait(10) and 0}),
+            optimize=False, tenant="T")
+        handles, shed = [h0], 0
+        for i in range(1, 10):
+            try:
+                handles.append(await eng.submit_async(
+                    chain_wf(f"full-{i}", 1, sleep=0.001),
+                    optimize=False, tenant="T"))
+            except QueueFull:
+                shed += 1
+        gate.set()
+        runs = await asyncio.gather(*handles)
+        return shed, runs
+
+    shed, runs = asyncio.run(main())
+    assert shed >= 1                        # backpressure actually bit
+    assert all(r.succeeded() for r in runs)  # admitted ones all completed
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# stress: >=200 concurrent submissions, one shared tiered store
+# ---------------------------------------------------------------------------
+
+def test_stress_200_concurrent_share_one_store_bounded_steps():
+    store = TieredCacheStore(
+        tiers=[CacheTier(mem_spec(64 << 10)), CacheTier(ssd_spec(256 << 10)),
+               CacheTier(remote_spec(1 << 20))], policy=CoulerPolicy())
+    eng = _engine(max_workers=8, cache=store, max_inflight_steps=6,
+                  promote_interval_s=0.01)
+    running = {"cur": 0, "peak": 0}
+    lock = threading.Lock()
+
+    def work(i, tag):
+        with lock:
+            running["cur"] += 1
+            running["peak"] = max(running["peak"], running["cur"])
+        time.sleep(0.001)
+        with lock:
+            running["cur"] -= 1
+        return (i, tag)
+
+    def build(i):
+        wf = WorkflowIR(f"stress-{i}")
+        wf.add_job(Job(name="a", fn=work, args=(i, "a"), cacheable=True,
+                       outputs=["a:out"], est_mem_bytes=256))
+        wf.add_job(Job(name="b", fn=work, args=(i, "b"), cacheable=True,
+                       outputs=["b:out"], est_mem_bytes=256))
+        wf.add_edge("a", "b")
+        return wf
+
+    async def main():
+        handles = []
+        for i in range(210):
+            handles.append(await eng.submit_async(
+                build(i), tenant=f"t{i % 7}", block=True))
+        return await asyncio.gather(*handles)
+
+    runs = asyncio.run(asyncio.wait_for(main(), timeout=300))
+    assert len(runs) == 210
+    assert all(r.succeeded() for r in runs)
+    assert running["peak"] <= 6             # bounded in-flight steps held
+    assert eng.gateway.stats["peak_inflight_steps"] <= 6
+    store.check_invariants()                # shared store stayed consistent
+    assert store.stats["admitted"] > 0
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# background promotion task (gateway-owned)
+# ---------------------------------------------------------------------------
+
+def test_background_promote_task_runs_and_stops_on_close():
+    store = TieredCacheStore(
+        tiers=[CacheTier(mem_spec(400)), CacheTier(ssd_spec(1000)),
+               CacheTier(remote_spec(4000))], policy=CoulerPolicy())
+    assert store.auto_promote_every == 0     # hit-count fallback disabled
+    eng = _engine(max_workers=2, cache=store, promote_interval_s=0.02)
+
+    def build(i):
+        wf = WorkflowIR(f"promo-{i}")
+        wf.add_job(Job(name="a", fn=lambda i=i: bytes(120), cacheable=True,
+                       outputs=["a:out"], est_mem_bytes=120))
+        return wf
+
+    for i in range(6):
+        assert eng.submit(build(i)).succeeded()
+    deadline = time.time() + 5
+    while store.stats["promote_passes"] == 0 and time.time() < deadline:
+        time.sleep(0.02)
+    assert store.stats["promote_passes"] >= 1    # driven by the gateway task
+
+    eng.close()
+    assert not eng._gateway._thread.is_alive()   # loop joined cleanly
+    passes = store.stats["promote_passes"]
+    time.sleep(0.1)
+    assert store.stats["promote_passes"] == passes   # task actually stopped
+
+
+def test_single_tier_cache_gets_no_promote_task():
+    eng = _engine(max_workers=2, promote_interval_s=0.01)
+    assert eng.submit(chain_wf("nt", 1)).succeeded()
+    assert eng.gateway._promote_task is None
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# persist collision regression
+# ---------------------------------------------------------------------------
+
+def test_persist_no_collision_same_second(tmp_path):
+    wf = WorkflowIR("dup")
+    r1, r2 = WorkflowRun(workflow=wf), WorkflowRun(workflow=wf)
+    r2.submitted = r1.submitted              # same wall-clock second
+    f1 = r1.persist(str(tmp_path))
+    f2 = r2.persist(str(tmp_path))
+    assert f1 != f2
+    assert f1.exists() and f2.exists()
+    assert r1.run_id != r2.run_id
+
+
+# ---------------------------------------------------------------------------
+# generic fallback + admission-queue feed of the cluster engine
+# ---------------------------------------------------------------------------
+
+def test_base_submit_async_fallback_multicluster():
+    wf = WorkflowIR("mc-async")
+    for i in range(4):
+        wf.add_job(Job(name=f"j{i}", est_time_s=1.0,
+                       resources=Resources(cpu=2)))
+    eng = MultiClusterEngine(clusters=[
+        Cluster("a", cpu=16, mem_bytes=1 << 40)])
+
+    async def main():
+        h = await eng.submit_async(wf)
+        evs = [e async for e in h.events()]
+        return evs, await h
+
+    evs, run = asyncio.run(main())
+    assert run.succeeded()
+    assert [e.type for e in evs] == [EventType.WORKFLOW_ADMITTED,
+                                     EventType.WORKFLOW_DONE]
+    assert evs[-1].status == "Succeeded"
+
+
+def test_submit_admitted_drains_queue_in_wrr_order():
+    q = AdmissionQueue(weights={"heavy": 2})
+    for i in range(4):
+        wf = WorkflowIR(f"h{i}")
+        wf.add_job(Job(name="j", est_time_s=1.0))
+        q.offer(AdmittedItem(wf=wf, tenant="heavy", priority=0))
+    for i in range(2):
+        wf = WorkflowIR(f"l{i}")
+        wf.add_job(Job(name="j", est_time_s=1.0))
+        q.offer(AdmittedItem(wf=wf, tenant="light", priority=0))
+    eng = MultiClusterEngine(clusters=[
+        Cluster("a", cpu=64, mem_bytes=1 << 40)])
+    runs = eng.submit_admitted(q)
+    assert len(runs) == 6 and len(q) == 0
+    assert all(r.succeeded() for r in runs.values())
+    assert eng.metrics["completed_workflows"] == 6
+    assert set(eng.quotas) == {"heavy", "light"}   # tenants became users
+
+    # duplicate workflow names across tenants: explicit error, not a
+    # silent wrong-run handoff (submit_many results are keyed by name)
+    q2 = AdmissionQueue()
+    for t in ("t1", "t2"):
+        wf = WorkflowIR("same-name")
+        wf.add_job(Job(name="j", est_time_s=1.0))
+        q2.offer(AdmittedItem(wf=wf, tenant=t))
+    with pytest.raises(ValueError, match="duplicate workflow name"):
+        eng.submit_admitted(q2)
+
+
+# ---------------------------------------------------------------------------
+# couler API entry points
+# ---------------------------------------------------------------------------
+
+def test_couler_run_async_and_stream():
+    eng = _engine(max_workers=2)
+    with couler.workflow("api-async") as ir:
+        a = couler.run_step(lambda: 2, step_name="a", cacheable=False)
+        couler.run_step(lambda x: x * 3, a, step_name="b", cacheable=False)
+
+    async def main():
+        h = await couler.run_async(submitter=eng, workflow_ir=ir)
+        return await h
+
+    run = asyncio.run(main())
+    assert run.succeeded() and run.artifacts["b:out"] == 6
+
+    with couler.workflow("api-stream") as ir2:
+        couler.run_step(lambda: 7, step_name="only", cacheable=False)
+
+    async def main2():
+        return [ev async for ev in couler.stream(submitter=eng,
+                                                 workflow_ir=ir2)]
+
+    evs = asyncio.run(main2())
+    _check_stream_invariants(evs)
+    assert evs[-1].status == "Succeeded"
+    eng.close()
