@@ -54,6 +54,12 @@ SUITES = [
          rows[-1]["n_workflows"], rows[-1]["speedup"],
          all(r["bounded_inflight_ok"] and r["all_succeeded"]
              for r in rows))),
+    ("streaming_pipeline", "benchmarks.bench_streaming",
+     {"n_chunks": 32, "chunk_sleep_s": 0.008},
+     lambda rows: "streamed_over_stage=%sx_meets_1p5x=%s" % (
+         rows[0]["streamed_over_stage"],
+         rows[0]["meets_1p5x_bar"] and rows[0]["artifacts_identical"]
+         and rows[0]["bounded_inflight_ok"])),
     ("learning_tableIV", "benchmarks.bench_learning", {},
      lambda rows: "couler_loc=" + str(
          [r for r in rows if r["interface"] == "couler"][0]["loc"])),

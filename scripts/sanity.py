@@ -1,7 +1,8 @@
 """Quick CPU sanity loop: forward + train step on all reduced archs, plus
 a tier-consistency check of the cache subsystem (bytes conserved across
 demotions/promotions, capacity respected, no duplicate private copies) and
-an event-stream ordering fuzz of the async workflow gateway."""
+event-stream ordering fuzzes of the async workflow gateway (plain DAGs and
+chunked streaming pipelines)."""
 import random
 import sys
 import time
@@ -126,8 +127,98 @@ def gateway_event_sanity() -> bool:
     return True
 
 
+def streaming_event_sanity() -> bool:
+    """Fuzz: random LINEAR streaming pipelines (run_stream -> map_stream^k,
+    some randomly cancelled mid-stream) through the gateway; on top of the
+    base ordering invariants, each step's STEP_CHUNK indices must be
+    0,1,2,… within an attempt (monotone, resetting only on a rewind) with
+    STEP_STREAMING before the first chunk, and a consumer never starts
+    before its producer's STEP_STREAMING (see repro.core.gateway)."""
+    import asyncio
+
+    from repro.core import couler
+    from repro.core.engines.local import LocalEngine
+    from repro.core.gateway import EventType
+
+    rng = random.Random(1)
+    eng = LocalEngine(max_workers=6, enable_speculation=False,
+                      promote_interval_s=0.0)
+
+    def build(i: int):
+        n_chunks = rng.randint(3, 10)
+        stages = rng.randint(1, 3)
+
+        def gen(_n=n_chunks):
+            for c in range(_n):
+                time.sleep(0.001)
+                yield c
+
+        with couler.workflow(f"sfuzz-{i}") as ir:
+            cur = couler.run_stream(gen, step_name="p", cacheable=False,
+                                    buffer_chunks=rng.choice([2, 4, 8]))
+            for k in range(stages):
+                cur = couler.map_stream(lambda c: c + 1, cur,
+                                        step_name=f"m{k}", cacheable=False)
+        return ir, n_chunks, stages
+
+    async def one(i: int) -> None:
+        ir, n_chunks, stages = build(i)
+        h = await eng.submit_async(ir, tenant=f"t{i % 3}", block=True)
+        cancelled = rng.random() < 0.3
+        if cancelled:
+            delay = rng.uniform(0, 0.01)
+
+            async def canceller():
+                await asyncio.sleep(delay)
+                h.cancel()
+            asyncio.get_running_loop().create_task(canceller())
+        evs = [ev async for ev in h.events()]
+        run = await h
+        assert evs[0].type is EventType.WORKFLOW_ADMITTED, evs[0]
+        assert evs[-1].terminal and evs[-1].status == run.status, evs[-1]
+        assert sum(1 for e in evs if e.terminal) == 1, evs
+        started, streaming, terminal, chunks = set(), set(), set(), {}
+        for e in evs[1:-1]:
+            assert e.is_step_event, e
+            if e.type is EventType.STEP_STARTED:
+                started.add(e.step)
+            elif e.type is EventType.STEP_STREAMING:
+                assert e.step in started, (e, "STREAMING before STARTED")
+                assert e.step not in terminal, e
+                streaming.add(e.step)
+            elif e.type is EventType.STEP_CHUNK:
+                assert e.step in streaming, (e, "CHUNK before STREAMING")
+                assert e.step not in terminal, e
+                prev = chunks.get(e.step, -1)
+                # monotone +1 within an attempt; reset only via rewind
+                assert e.chunk == prev + 1 or e.chunk == 0, (e, prev)
+                chunks[e.step] = e.chunk
+            else:
+                assert e.step in started, (e, "terminal before STARTED")
+                terminal.add(e.step)
+        if run.status == "Succeeded":
+            job = "p" if stages == 0 else f"m{stages - 1}"
+            exp = [c + stages for c in range(n_chunks)]
+            assert run.artifacts[f"{job}:out"] == exp, run.artifacts
+
+    async def _all():
+        await asyncio.wait_for(
+            asyncio.gather(*[one(i) for i in range(24)]), timeout=120)
+
+    try:
+        asyncio.run(_all())
+    except AssertionError as e:
+        print(f"FAIL streaming_events {e}")
+        return False
+    finally:
+        eng.close()
+    print("OK   streaming_events 24 runs, chunk invariants held")
+    return True
+
+
 ok = cache_tier_sanity() and ok
 ok = gateway_event_sanity() and ok
+ok = streaming_event_sanity() and ok
 for aid in only:
     spec = get_arch(aid)
     cfg = reduced(spec.model).replace(param_dtype="float32",

@@ -34,6 +34,18 @@ class StepOutput:
         return f"StepOutput({self.job_name}:{self.artifact})"
 
 
+class StreamOutput(StepOutput):
+    """Handle to a *streamed* output artifact (``run_stream``/``map_stream``).
+
+    Behaves as a normal ``StepOutput`` everywhere: a non-streaming consumer
+    that receives it sees the fully materialized list of chunks. Passing it
+    to ``map_stream`` instead wires the consumer chunk-wise onto the
+    producer's ``ArtifactChannel`` so both overlap in time."""
+
+    def __repr__(self):
+        return f"StreamOutput({self.job_name}:{self.artifact})"
+
+
 def _wf() -> WorkflowIR:
     wf = getattr(_local, "wf", None)
     if wf is None:
@@ -116,6 +128,45 @@ def run_step(fn: Callable, *args, step_name: Optional[str] = None,
             if k in kw}
     return _add_step(step_name or getattr(fn, "__name__", "step"), fn, args,
                      kw, kind="job", step_name=step_name, **opts)
+
+
+def run_stream(fn: Callable, *args, step_name: Optional[str] = None,
+               buffer_chunks: int = 8, **kw) -> StreamOutput:
+    """Streaming producer step: ``fn(*args)`` must return an iterable (a
+    generator, typically) whose items are the output chunks. Downstream
+    ``map_stream`` consumers start as soon as the first chunk is emitted;
+    any other consumer sees the materialized list of chunks."""
+    opts = {k: kw.pop(k) for k in ("resources", "cacheable", "est_time_s",
+                                   "est_mem_bytes", "retry_limit")
+            if k in kw}
+    out = _add_step(step_name or getattr(fn, "__name__", "stream"), fn, args,
+                    kw, kind="job", step_name=step_name, **opts)
+    job = _wf().jobs[out.job_name]
+    job.stream_output = True
+    job.stream_buffer_chunks = buffer_chunks
+    return StreamOutput(out.job_name, out.artifact)
+
+
+def map_stream(fn: Callable[[Any], Any], source: StepOutput, *args,
+               step_name: Optional[str] = None, buffer_chunks: int = 8,
+               **kw) -> StreamOutput:
+    """Chunk-wise consumer: applies ``fn(chunk, *args)`` to each chunk of
+    ``source`` as it arrives, emitting its own streamed output (so stages
+    chain into a pipeline). If ``source`` is not streamed (or its producer
+    already finished), the materialized value is iterated instead — same
+    results, no overlap."""
+    opts = {k: kw.pop(k) for k in ("resources", "cacheable", "est_time_s",
+                                   "est_mem_bytes", "retry_limit")
+            if k in kw}
+    out = _add_step(step_name or getattr(fn, "__name__", "map_stream"), fn,
+                    (source,) + args, kw, kind="job", step_name=step_name,
+                    **opts)
+    job = _wf().jobs[out.job_name]
+    job.stream_input = True
+    job.stream_arg = source.artifact
+    job.stream_output = True
+    job.stream_buffer_chunks = buffer_chunks
+    return StreamOutput(out.job_name, out.artifact)
 
 
 def run_script(image: str = "", source: Optional[Callable] = None,

@@ -17,6 +17,8 @@ toward MEM even when their structural reuse value is modest.
 """
 from __future__ import annotations
 
+import weakref
+from collections import OrderedDict
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.cache.scoring import (CachedArtifact, importance,
@@ -85,47 +87,71 @@ class LRUPolicy(CachePolicy):
         return art.last_used
 
 
+class _WfScoringCtx:
+    """Eq. 3/4 memo state for ONE workflow: per-producer predecessor reach,
+    reuse value, and frontier-keyed reconstruction cost. Holding these per
+    workflow (instead of for the single attached one) is what lets
+    concurrent runs share a store without dropping each other's memos."""
+
+    __slots__ = ("ref", "struct_v", "weights_v", "pred_reach", "reuse",
+                 "recon")
+
+    def __init__(self, wf: WorkflowIR):
+        self.ref = weakref.ref(wf)    # weak: dead ids may be reused
+        self.struct_v = wf.structure_version
+        self.weights_v = wf.weights_version
+        self.pred_reach: Dict[str, FrozenSet[str]] = {}
+        self.reuse: Dict[str, float] = {}
+        self.recon: Dict[Tuple[str, FrozenSet[str]], float] = {}
+
+
 class CoulerPolicy(CachePolicy):
     """Paper Algorithm 2: score = caching importance factor I(u).
 
-    Eq. 3/4 are memoized per producer: F(u) depends only on workflow
-    structure, and L(u) additionally on est_time_s weights plus the part of
-    the cached frontier that falls inside u's untruncated n-layer
-    predecessor reach — so re-scoring after an unrelated eviction is a dict
-    lookup instead of a BFS + adjacency-matrix rebuild."""
+    Eq. 3/4 are memoized per producer within a per-workflow context
+    (LRU-bounded): F(u) depends only on workflow structure, and L(u)
+    additionally on est_time_s weights plus the part of the cached
+    frontier that falls inside u's untruncated n-layer predecessor reach —
+    so re-scoring after an unrelated eviction is a dict lookup instead of
+    a BFS + adjacency-matrix rebuild. Each artifact scores against its own
+    DAG (``CachedArtifact.wf_ref``, falling back to ``store.workflow``),
+    and the Eq. 3 frontier only counts cached items of the SAME workflow,
+    so concurrent runs neither thrash the memos nor leak producers into
+    each other's frontiers."""
     name = "couler"
+
+    # distinct live workflows whose memos we keep; LRU past this
+    _MAX_CONTEXTS = 16
 
     def __init__(self, alpha: float = 1.5, beta: float = 1.0,
                  n_layers: int = 3, literal_eq4: bool = False):
         self.alpha, self.beta, self.n_layers = alpha, beta, n_layers
         self.literal_eq4 = literal_eq4
-        self._wf: Optional[WorkflowIR] = None       # strong ref (id safety)
-        self._struct_v = -1
-        self._weights_v = -1
-        self._pred_reach: Dict[str, FrozenSet[str]] = {}
-        self._reuse: Dict[str, float] = {}
-        self._recon: Dict[Tuple[str, FrozenSet[str]], float] = {}
+        self._ctxs: "OrderedDict[int, _WfScoringCtx]" = OrderedDict()
 
     def invalidate(self, wf: Optional[WorkflowIR]) -> None:
-        self._wf = None
-        self._struct_v = -1
+        self._ctxs.clear()
 
-    def _sync(self, wf: WorkflowIR) -> None:
-        if wf is not self._wf or wf.structure_version != self._struct_v:
-            self._wf = wf
-            self._struct_v = wf.structure_version
-            self._weights_v = wf.weights_version
-            self._pred_reach.clear()
-            self._reuse.clear()
-            self._recon.clear()
-        elif wf.weights_version != self._weights_v:
-            self._weights_v = wf.weights_version
-            self._recon.clear()                      # Eq. 3 reads w_i
+    def _ctx_for(self, wf: WorkflowIR) -> _WfScoringCtx:
+        key = id(wf)
+        ctx = self._ctxs.get(key)
+        if ctx is None or ctx.ref() is not wf \
+                or wf.structure_version != ctx.struct_v:
+            ctx = _WfScoringCtx(wf)
+            self._ctxs[key] = ctx
+        elif wf.weights_version != ctx.weights_v:
+            ctx.weights_v = wf.weights_version
+            ctx.recon.clear()                        # Eq. 3 reads w_i
+        self._ctxs.move_to_end(key)
+        while len(self._ctxs) > self._MAX_CONTEXTS:
+            self._ctxs.popitem(last=False)
+        return ctx
 
-    def _reach(self, wf: WorkflowIR, producer: str) -> FrozenSet[str]:
+    def _reach(self, ctx: _WfScoringCtx, wf: WorkflowIR,
+               producer: str) -> FrozenSet[str]:
         """Untruncated n-layer predecessor reach of `producer` — the only
         nodes whose cached-status can alter Eq. 3's truncated BFS."""
-        s = self._pred_reach.get(producer)
+        s = ctx.pred_reach.get(producer)
         if s is None:
             frontier = [producer]
             seen = {producer}
@@ -140,7 +166,7 @@ class CoulerPolicy(CachePolicy):
                 if not frontier:
                     break
             s = frozenset(seen)
-            self._pred_reach[producer] = s
+            ctx.pred_reach[producer] = s
         return s
 
     # frontier-sig entries accumulate as the cached set churns even when
@@ -148,22 +174,22 @@ class CoulerPolicy(CachePolicy):
     # cheaper than unbounded growth (misses just recompute)
     _RECON_MEMO_CAP = 4096
 
-    def _lf(self, wf: WorkflowIR, art: CachedArtifact,
+    def _lf(self, ctx: _WfScoringCtx, wf: WorkflowIR, art: CachedArtifact,
             frontier_sig: FrozenSet[str]) -> Tuple[float, float]:
         """Memoized (L(u), F(u)) for art's producer under the frontier."""
         key = (art.producer, frontier_sig)
-        l = self._recon.get(key)
+        l = ctx.recon.get(key)
         if l is None:
-            if len(self._recon) >= self._RECON_MEMO_CAP:
-                self._recon.clear()
+            if len(ctx.recon) >= self._RECON_MEMO_CAP:
+                ctx.recon.clear()
             l = reconstruction_cost(wf, art.producer, frontier_sig,
                                     self.n_layers)
-            self._recon[key] = l
-        f = self._reuse.get(art.producer)
+            ctx.recon[key] = l
+        f = ctx.reuse.get(art.producer)
         if f is None:
             f = reuse_value(wf, art.producer, self.n_layers,
                             literal_eq4=self.literal_eq4)
-            self._reuse[art.producer] = f
+            ctx.reuse[art.producer] = f
         return l, f
 
     def score(self, art: CachedArtifact, store) -> float:
@@ -171,15 +197,29 @@ class CoulerPolicy(CachePolicy):
 
     def _batch(self, arts: Sequence[CachedArtifact], store,
                reuse_boost: bool) -> List[float]:
-        wf = store.workflow
-        if wf is None:
-            return [a.last_used for a in arts]
-        self._sync(wf)
-        prod_count: Dict[str, int] = {}
-        for a in store.items.values():
-            prod_count[a.producer] = prod_count.get(a.producer, 0) + 1
+        default_wf = store.workflow
+        items = store.items
+        # per-workflow cached-producer counts: Eq. 3's frontier must not
+        # mix producers of unrelated concurrent workflows
+        prod_count: Dict[int, Dict[str, int]] = {}
+        wf_of: Dict[str, Optional[WorkflowIR]] = {}
+        for a in items.values():
+            w = a.wf_ref() if a.wf_ref is not None else None
+            if w is None:
+                w = default_wf
+            wf_of[a.name] = w
+            if w is None:
+                continue
+            d = prod_count.setdefault(id(w), {})
+            d[a.producer] = d.get(a.producer, 0) + 1
         out = []
         for art in arts:
+            wf = art.wf_ref() if art.wf_ref is not None else None
+            if wf is None:
+                wf = default_wf
+            if wf is None:
+                out.append(art.last_used)
+                continue
             if art.producer not in wf.jobs:
                 # orphaned producer (workflow edited since caching). For
                 # EVICTION keep the legacy LRU-style fallback; for the
@@ -188,15 +228,20 @@ class CoulerPolicy(CachePolicy):
                 # orphans below everything so they sink instead
                 out.append(float("-inf") if reuse_boost else art.last_used)
                 continue
-            # cached frontier = producers of stored items minus the item
-            # stored under this artifact's own key (Algorithm 2's k != u),
-            # restricted to the predecessor reach (the rest cannot matter)
-            own = store.items.get(art.name)
-            own_producer = own.producer if own is not None else None
+            ctx = self._ctx_for(wf)
+            pc = prod_count.get(id(wf), {})
+            # cached frontier = producers of stored items of THIS workflow
+            # minus the item stored under this artifact's own key
+            # (Algorithm 2's k != u), restricted to the predecessor reach
+            # (the rest cannot matter)
+            own = items.get(art.name)
+            own_producer = (own.producer
+                            if own is not None and wf_of.get(art.name) is wf
+                            else None)
             sig = frozenset(
-                p for p in self._reach(wf, art.producer)
-                if prod_count.get(p, 0) - (1 if p == own_producer else 0) > 0)
-            l, f = self._lf(wf, art, sig)
+                p for p in self._reach(ctx, wf, art.producer)
+                if pc.get(p, 0) - (1 if p == own_producer else 0) > 0)
+            l, f = self._lf(ctx, wf, art, sig)
             if reuse_boost:
                 f = f + art.uses       # observed hits are Eq. 4's r events
             v = art.bytes / max(store.capacity_bytes, 1)

@@ -69,6 +69,12 @@ class CachedArtifact:
     last_used: float = field(default_factory=time.time)
     uses: int = 0
     insertion: int = 0                 # FIFO order
+    # weakref to the producing WorkflowIR (set when the engine offers with
+    # workflow=...): scoring resolves the producer in THIS DAG instead of
+    # whichever workflow was attached last — the per-artifact scoring
+    # context that makes concurrent workflows sharing a store stop
+    # invalidating each other. None falls back to store.workflow.
+    wf_ref: Any = None
 
 
 def predecessor_subgraph(wf: WorkflowIR, job: str, n_layers: int,

@@ -32,11 +32,37 @@ O(1) — the next time a victim is actually needed.
 a facade: one MEM-like tier, so Algorithm 2 degenerates to exactly the
 pre-tier behavior — losing newcomers are rejected, displaced occupants are
 evicted — with the same ``offer``/``get``/stats surface.
+
+Chunk-granular entries (streaming pipelines)
+--------------------------------------------
+A streaming step with cache key ``K`` offers each chunk *i* under
+``"K#c{i}"`` and, after the stream closes, a manifest ``"K#n"`` holding the
+chunk count. The store itself treats these as ordinary artifacts — they are
+admitted, demoted, promoted, and evicted independently, so the byte
+ledger and Eq. 6 scoring need no special cases and a chunk run may span
+MEM/SSD/REMOTE. The *contract* lives in the key scheme: the manifest is
+offered last, so its presence promises the full run was offered once; a
+replaying engine probes ``K#c0, K#c1, …`` until the first miss and
+recomputes only the tail (chunks evicted mid-run simply shorten the
+replayable prefix). Chunk streams are deterministic — equal key implies
+equal chunk sequence — which is what makes a cached prefix + recomputed
+tail equivalent to a full recompute.
+
+Concurrent scoring contexts
+---------------------------
+``attach_workflow`` registers (not replaces) a workflow: many concurrent
+runs may share one store, and each offered artifact carries a weakref to
+its own producer DAG (``CachedArtifact.wf_ref``), which the Couler policy
+scores against — so interleaved workflows no longer thrash the Eq. 3/4
+memo or each other's frontier. ``store.workflow`` remains the most
+recently attached DAG, used only as the fallback for artifacts offered
+without a workflow.
 """
 from __future__ import annotations
 
 import heapq
 import time
+import weakref
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cache.policies import CachePolicy, CoulerPolicy
@@ -91,7 +117,12 @@ class TieredCacheStore:
             [[] for _ in self.tiers]
         self._heap_keys: List[Optional[Tuple[int, int]]] = \
             [None for _ in self.tiers]
-        self._wf_versions: Optional[Tuple[int, int]] = None
+        self._wf_versions: Optional[Tuple] = None
+        # every workflow whose artifacts may live here (weak: a finished
+        # run's DAG must not be pinned by the cache); scoring contexts are
+        # per-artifact via CachedArtifact.wf_ref
+        self._workflows: "weakref.WeakValueDictionary[int, WorkflowIR]" = \
+            weakref.WeakValueDictionary()
 
     # -- legacy surface ----------------------------------------------------
     @property
@@ -111,10 +142,14 @@ class TieredCacheStore:
         return sum(t.capacity_bytes for t in self.tiers)
 
     def attach_workflow(self, wf: WorkflowIR) -> None:
+        """Register ``wf`` as a scoring context (additive — concurrent
+        workflows sharing the store do not displace each other; re-attaching
+        an already-registered workflow is free and bumps nothing)."""
         with self._lock:
-            if wf is not self.workflow:
-                self.workflow = wf
-                self.policy.invalidate(wf)
+            self.workflow = wf
+            k = id(wf)
+            if self._workflows.get(k) is not wf:
+                self._workflows[k] = wf
                 self._epoch += 1
 
     def hit_ratio(self) -> float:
@@ -164,14 +199,25 @@ class TieredCacheStore:
             return None
 
     def offer(self, name: str, value: Any, compute_time_s: float,
-              producer: str, nbytes: Optional[int] = None) -> bool:
+              producer: str, nbytes: Optional[int] = None,
+              workflow: Optional[WorkflowIR] = None) -> bool:
         """Algorithm 2: try to admit a newly produced artifact, demoting or
-        evicting lower-importance items while capacity is exceeded."""
+        evicting lower-importance items while capacity is exceeded.
+        ``workflow`` (optional) pins the artifact's scoring context to its
+        own producer DAG; without it scoring falls back to the most
+        recently attached workflow."""
         b = nbytes if nbytes is not None else sizeof(value)
         with self._lock:
+            if workflow is not None:
+                k = id(workflow)
+                if self._workflows.get(k) is not workflow:
+                    self._workflows[k] = workflow
+                    self._epoch += 1
             art = CachedArtifact(name=name, value=value, bytes=b,
                                  compute_time_s=compute_time_s,
-                                 producer=producer, insertion=self._insertions)
+                                 producer=producer, insertion=self._insertions,
+                                 wf_ref=(weakref.ref(workflow)
+                                         if workflow is not None else None))
             self._insertions += 1
 
             if not self.policy.admit(art):
@@ -296,9 +342,13 @@ class TieredCacheStore:
                          self.workflow)
 
     def _sync_workflow_versions(self) -> None:
-        wf = self.workflow
-        v = (None if wf is None
-             else (wf.structure_version, wf.weights_version))
+        # heaps cache policy scores, which read every registered live
+        # workflow's structure/weights versions — any drift invalidates
+        wfs: Dict[int, WorkflowIR] = dict(self._workflows)
+        if self.workflow is not None:
+            wfs[id(self.workflow)] = self.workflow
+        v = tuple(sorted((k, w.structure_version, w.weights_version)
+                         for k, w in wfs.items()))
         if v != self._wf_versions:
             self._wf_versions = v
             self._epoch += 1

@@ -35,6 +35,10 @@ class StepRecord:
     end: float = 0.0
     error: str = ""
     speculative: bool = False
+    # streaming steps: chunks served from the chunk-granular cache vs
+    # computed this run (whole-step CACHED means all chunks replayed)
+    chunks_replayed: int = 0
+    chunks_emitted: int = 0
 
     def duration(self) -> float:
         return max(0.0, self.end - self.start)

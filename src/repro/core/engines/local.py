@@ -27,6 +27,7 @@ from __future__ import annotations
 import asyncio
 import concurrent.futures as cf
 import hashlib
+import itertools
 import pickle
 import threading
 import time
@@ -38,6 +39,9 @@ from repro.core.caching import CacheStore, CoulerPolicy
 from repro.core.engines.base import (Engine, StepRecord, StepStatus,
                                      TransientError, WorkflowRun,
                                      is_transient)
+from repro.core.gateway.channels import (StepContext, StreamBroken,
+                                         StreamCancelled, StreamReader,
+                                         StreamRewound)
 from repro.core.ir import Job, WorkflowIR
 
 
@@ -49,13 +53,21 @@ def _hash_value(v: Any) -> str:
     return hashlib.sha256(b).hexdigest()[:16]
 
 
-def cache_key(job: Job, artifact_values: Dict[str, Any]) -> str:
+def cache_key(job: Job, artifact_values: Dict[str, Any],
+              stream_key: Optional[str] = None) -> str:
+    """Content key for a step's outputs. For a chunk-wise consumer
+    (``stream_key`` given) the streamed input's contribution is the
+    *producer's* cache key instead of a hash of the (possibly not yet
+    materialized) value — equal producer key implies equal chunk stream."""
     parts = [job.name, job.kind, job.image, ",".join(job.command)]
     if job.fn is not None and hasattr(job.fn, "__code__"):
         parts.append(hashlib.sha256(job.fn.__code__.co_code).hexdigest()[:12])
     for a in (job.args or ()):
         if isinstance(a, StepOutput):
-            parts.append(_hash_value(artifact_values.get(a.artifact)))
+            if stream_key is not None and a.artifact == job.stream_arg:
+                parts.append(f"stream:{stream_key}")
+            else:
+                parts.append(_hash_value(artifact_values.get(a.artifact)))
         else:
             parts.append(repr(a))
     for k in sorted(job.kwargs or {}):
@@ -167,7 +179,10 @@ class LocalEngine(Engine):
             p.shutdown(wait=False)
 
     # ------------------------------------------------------------------
-    def _exec_step(self, job: Job, run: WorkflowRun) -> StepStatus:
+    def _exec_step(self, job: Job, run: WorkflowRun,
+                   ctx: Optional[StepContext] = None) -> StepStatus:
+        if job.stream_output or job.stream_input:
+            return self._exec_stream_step(job, run, ctx)
         rec = run.steps[job.name]
         rec.start = time.time()
         rec.status = StepStatus.RUNNING
@@ -212,10 +227,245 @@ class LocalEngine(Engine):
         run.workflow.note_weights_changed()
         if job.cacheable:
             self.cache.offer(key, value, compute_time_s=dur,
-                             producer=job.name)
+                             producer=job.name, workflow=run.workflow)
         rec.status = StepStatus.SUCCEEDED
         rec.end = time.time()
         return rec.status
+
+    # -- streaming steps (couler.run_stream / couler.map_stream) --------
+    #
+    # A streaming step ALWAYS takes this path, gateway or not: its fn
+    # returns a generator, and storing that raw generator as the artifact
+    # (the non-streaming path would) is never right — without a channel
+    # the chunks are simply materialized with no overlap.
+    #
+    # Chunk-granular caching: chunk i of a step with key K is offered as
+    # "K#c{i}" and the chunk count as manifest "K#n". A later run replays
+    # the longest cached prefix (chunks stream downstream immediately) and
+    # recomputes only the tail by re-running the source and skipping the
+    # first k items — valid because streams are deterministic: equal key
+    # implies equal chunk sequence. All chunks cached => the step is
+    # ``Cached`` without invoking its fn at all.
+    def _exec_stream_step(self, job: Job, run: WorkflowRun,
+                          ctx: Optional[StepContext]) -> StepStatus:
+        rec = run.steps[job.name]
+        rec.start = time.time()
+        rec.status = StepStatus.RUNNING
+        out_art = job.outputs[0] if job.outputs else None
+        ch = ctx.channels.get(out_art) if (ctx and out_art) else None
+        in_ch = (ctx.channels.get(job.stream_arg)
+                 if (ctx and job.stream_input and job.stream_arg) else None)
+
+        if job.condition is not None \
+                and not job.condition.evaluate(run.artifacts):
+            rec.status = StepStatus.SKIPPED
+            rec.end = time.time()
+            if ch is not None:
+                ch.close(0)
+            return rec.status
+
+        key = ""
+        if job.cacheable:
+            if in_ch is not None:
+                # the consumer's key substitutes the producer's key for the
+                # streamed (unmaterialized) input; an uncacheable upstream
+                # (empty source_key) cannot identify the stream => no key
+                key = (cache_key(job, run.artifacts,
+                                 stream_key=in_ch.source_key)
+                       if in_ch.source_key else "")
+            else:
+                key = cache_key(job, run.artifacts)
+        if ch is not None:
+            ch.source_key = key
+
+        failures = 0
+        t0 = time.time()
+        try:
+            while True:
+                rec.attempts += 1
+                try:
+                    chunks, fully_cached = self._stream_once(
+                        job, run, rec, ch, in_ch, key,
+                        ctx.publish if ctx else None)
+                    break
+                except StreamRewound:
+                    # upstream producer retried: restart (replaying our own
+                    # cached prefix) without spending our retry budget
+                    if ch is not None:
+                        ch.rewind()
+                    continue
+                except StreamBroken as e:
+                    rec.error = f"{type(e).__name__}: {e}"
+                    rec.status = StepStatus.FAILED
+                    rec.end = time.time()
+                    if ch is not None:
+                        ch.abort(e)
+                    return rec.status
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    if is_transient(e) and failures <= job.retry_limit:
+                        # retried producer rewinds its channel: attached
+                        # readers restart from chunk 0
+                        if ch is not None:
+                            ch.rewind()
+                        time.sleep(self.retry_backoff_s * (2 ** (failures - 1)))
+                        continue
+                    rec.error = f"{type(e).__name__}: {e}"
+                    rec.status = StepStatus.FAILED
+                    rec.end = time.time()
+                    if ch is not None:
+                        ch.abort(e)
+                    raise
+        except StreamCancelled:
+            # cooperative cancel mid-stream: propagate so the gateway
+            # reverts this step to Pending (the run stays resumable)
+            raise
+
+        dur = time.time() - t0
+        if out_art is not None:
+            run.artifacts[out_art] = chunks
+        if fully_cached:
+            rec.status = StepStatus.CACHED
+            rec.end = time.time()
+            return rec.status
+        job.est_time_s = 0.5 * job.est_time_s + 0.5 * dur
+        run.workflow.note_weights_changed()
+        if key:
+            # manifest last: its presence promises the full chunk run was
+            # offered (individual chunks may still be evicted later — the
+            # replay loop probes per chunk and recomputes the tail)
+            self.cache.offer(f"{key}#n", len(chunks), compute_time_s=0.0,
+                             producer=job.name, workflow=run.workflow)
+        rec.status = StepStatus.SUCCEEDED
+        rec.end = time.time()
+        return rec.status
+
+    def _stream_once(self, job: Job, run: WorkflowRun, rec: StepRecord,
+                     ch, in_ch, key: str, publish):
+        """One attempt at producing the full chunk sequence: replay the
+        cached prefix, then compute the tail from the source (the fn's
+        generator, or the upstream channel/materialized chunks for
+        consumers). Returns (chunks, fully_cached)."""
+        from repro.core.gateway.events import EventType
+        rec.chunks_replayed = 0
+        rec.chunks_emitted = 0
+        chunks: List[Any] = []
+        announced = [False]
+
+        def emit(c: Any, replay: bool) -> None:
+            if publish is not None and not announced[0]:
+                announced[0] = True
+                publish(EventType.STEP_STREAMING, step=job.name)
+            if ch is not None:
+                ch.put(c, replay=replay)   # blocks under backpressure
+            chunks.append(c)
+            if publish is not None:
+                publish(EventType.STEP_CHUNK, step=job.name,
+                        chunk=len(chunks) - 1)
+
+        n_total: Optional[int] = None
+        if key:
+            m = self.cache.get(f"{key}#n")
+            if m is not None:
+                n_total = int(m.value)
+            while n_total is None or len(chunks) < n_total:
+                hit = self.cache.get(f"{key}#c{len(chunks)}")
+                if hit is None:
+                    break
+                emit(hit.value, True)
+                rec.chunks_replayed += 1
+            if n_total is not None and len(chunks) >= n_total:
+                if ch is not None:
+                    ch.close(len(chunks))
+                return chunks, True
+        k = len(chunks)                    # cached prefix length
+
+        reader: Optional[StreamReader] = None
+        try:
+            last = time.time()
+            if job.stream_input:
+                if in_ch is not None:
+                    reader = in_ch.reader(job.name)
+                    if k:
+                        reader.seek(k)     # chunk j depends on input j only
+                    indexed = enumerate(reader, start=k)
+                else:
+                    # producer already materialized (resume / other part /
+                    # non-gateway execution): same chunks, no overlap
+                    mat = run.artifacts.get(job.stream_arg)
+                    it = iter(mat) if mat is not None else iter(())
+                    indexed = enumerate(itertools.islice(it, k, None),
+                                        start=k)
+                per_chunk = self._stream_consumer_fn(job, run)
+                for j, c_in in indexed:
+                    c = per_chunk(c_in)
+                    emit(c, False)
+                    rec.chunks_emitted += 1
+                    now = time.time()
+                    if key:
+                        self.cache.offer(f"{key}#c{j}", c,
+                                         compute_time_s=now - last,
+                                         producer=job.name,
+                                         workflow=run.workflow)
+                    last = now
+            else:
+                for j, c in enumerate(self._invoke_stream(job, run)):
+                    if j < k:
+                        continue           # deterministic prefix replayed
+                    emit(c, False)
+                    rec.chunks_emitted += 1
+                    now = time.time()
+                    if key:
+                        self.cache.offer(f"{key}#c{j}", c,
+                                         compute_time_s=now - last,
+                                         producer=job.name,
+                                         workflow=run.workflow)
+                    last = now
+        finally:
+            if reader is not None:
+                reader.close()
+        if ch is not None:
+            ch.close(len(chunks))
+        return chunks, False
+
+    def _stream_consumer_fn(self, job: Job, run: WorkflowRun):
+        """Bind a chunk-wise consumer's non-stream args once; returns a
+        callable chunk -> output chunk."""
+        fn = job.fn
+        if fn is None:
+            return lambda c: c             # container placeholder: identity
+        slots: List[Any] = []
+        stream_idx = None
+        for i, a in enumerate(job.args):
+            if isinstance(a, StepOutput) and a.artifact == job.stream_arg \
+                    and stream_idx is None:
+                stream_idx = i
+                slots.append(None)
+            elif isinstance(a, StepOutput):
+                slots.append(run.artifacts.get(a.artifact))
+            else:
+                slots.append(a)
+        kwargs = job.kwargs
+
+        if stream_idx is None:
+            return lambda c: fn(c, *slots, **kwargs)
+
+        def call(c: Any) -> Any:
+            args = list(slots)
+            args[stream_idx] = c
+            return fn(*args, **kwargs)
+        return call
+
+    def _invoke_stream(self, job: Job, run: WorkflowRun):
+        """Invoke a streaming producer's fn and return its chunk iterator.
+        Speculation never applies here — racing a duplicate generator would
+        double-emit chunks."""
+        if job.fn is None:
+            return iter([" ".join(job.command) or job.name])
+        args = [run.artifacts.get(a.artifact) if isinstance(a, StepOutput)
+                else a for a in job.args]
+        res = job.fn(*args, **job.kwargs)
+        return iter(res)
 
     def _invoke_with_retry(self, job: Job, run: WorkflowRun, rec: StepRecord):
         attempt = 0
@@ -277,7 +527,25 @@ class LocalEngine(Engine):
             try:
                 return primary.result(timeout=budget_s)
             except cf.TimeoutError:
-                backup = spec_pool.submit(job.fn, *args, **job.kwargs)
+                # the backup counts against the gateway's global
+                # max_inflight_steps bound: reserve a slot (non-blocking) or
+                # skip speculation — backups must not exceed the bound the
+                # scheduled steps honour. Engines used without a gateway
+                # have no bound to respect.
+                gw = self._gateway
+                if gw is not None and not gw.try_reserve_step_slot():
+                    return primary.result()
+                try:
+                    backup = spec_pool.submit(job.fn, *args, **job.kwargs)
+                except BaseException:
+                    if gw is not None:
+                        gw.release_step_slot()
+                    raise
+                if gw is not None:
+                    # the slot stays held until the backup thread actually
+                    # finishes, even when the primary wins the race
+                    backup.add_done_callback(
+                        lambda _f: gw.release_step_slot())
                 futures.append(backup)
                 done, _ = cf.wait([primary, backup],
                                   return_when=cf.FIRST_COMPLETED)

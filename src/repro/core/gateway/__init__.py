@@ -19,6 +19,13 @@ ordered sequence of ``WorkflowEvent``s:
     event (``seq == 0``).
 ``STEP_STARTED``
     A step acquired an in-flight slot and was handed to the worker pool.
+``STEP_STREAMING``
+    A streaming step (``couler.run_stream`` / ``couler.map_stream``) is
+    about to emit its first chunk — downstream chunk-wise consumers may
+    start from this point, before the producer's terminal event.
+``STEP_CHUNK``
+    One chunk delivered into the step's artifact channel (or replayed
+    from the chunk-granular cache); ``chunk`` is its 0-based index.
 ``STEP_SUCCEEDED`` / ``STEP_CACHED`` / ``STEP_SKIPPED`` / ``STEP_FAILED``
     The step's terminal status: executed, served from the artifact store
     (Algorithm 2 consumer side), skipped by its ``couler.when`` condition,
@@ -29,13 +36,28 @@ ordered sequence of ``WorkflowEvent``s:
     ``{"Succeeded", "Failed", "Cancelled"}``. A cancelled run keeps its
     unlaunched steps ``Pending`` and is resumable via ``engine.resume``.
 
-Invariants (pinned by ``tests/test_gateway.py`` and the event-ordering
-fuzz in ``scripts/sanity.py``):
+Invariants (pinned by ``tests/test_gateway.py``, ``tests/test_streaming.py``
+and the event-ordering fuzz in ``scripts/sanity.py``):
 
 1. ``WORKFLOW_ADMITTED`` precedes every ``STEP_*`` event.
 2. Exactly one terminal event per run, and nothing follows it.
 3. Every ``STEP_SUCCEEDED/CACHED/SKIPPED/FAILED`` is preceded by its own
    ``STEP_STARTED``.
+4. Every ``STEP_STREAMING``/``STEP_CHUNK`` falls strictly between its own
+   step's ``STEP_STARTED`` and terminal event, and the step's first
+   ``STEP_CHUNK`` is preceded by its ``STEP_STREAMING``.
+5. Within one *attempt* a step's ``STEP_CHUNK`` indices are 0,1,2,…;
+   a retried producer rewinds its channel and restarts at chunk 0, so
+   indices reset only after a failure-triggered rewind.
+6. A consumer's ``STEP_STARTED`` may precede its producer's terminal
+   event (that is the point of streaming) but never the producer's
+   ``STEP_STREAMING``.
+
+Exception: a step interrupted *mid-stream* by cooperative cancellation is
+reverted to ``Pending`` (the run stays resumable) and — like a step that
+never launched — gets no terminal step event; its ``STEP_STARTED`` /
+``STEP_STREAMING`` / ``STEP_CHUNK`` events remain in the history, so
+invariant 3 is scoped to runs that were not cancelled.
 
 The generic ``Engine.submit_async`` fallback (engines without a native
 async path, e.g. ``MultiClusterEngine`` or the YAML generators) emits only
@@ -43,10 +65,16 @@ the coarse pair ``WORKFLOW_ADMITTED`` / ``WORKFLOW_DONE``.
 """
 from repro.core.gateway.admission import (AdmissionQueue, AdmittedItem,
                                           QueueFull)
+from repro.core.gateway.channels import (ArtifactChannel, StepContext,
+                                         StreamBroken, StreamCancelled,
+                                         StreamError, StreamReader,
+                                         StreamRewound, StreamStalled)
 from repro.core.gateway.events import STEP_EVENTS, EventType, WorkflowEvent
 from repro.core.gateway.gateway import WorkflowGateway
 from repro.core.gateway.run import AsyncWorkflowRun
 
 __all__ = ["AdmissionQueue", "AdmittedItem", "QueueFull", "EventType",
            "STEP_EVENTS", "WorkflowEvent", "WorkflowGateway",
-           "AsyncWorkflowRun"]
+           "AsyncWorkflowRun", "ArtifactChannel", "StreamReader",
+           "StepContext", "StreamError", "StreamCancelled", "StreamRewound",
+           "StreamBroken", "StreamStalled"]

@@ -14,6 +14,8 @@ class EventType(str, enum.Enum):
 
     WORKFLOW_ADMITTED = "WORKFLOW_ADMITTED"   # passed the backpressure gate
     STEP_STARTED = "STEP_STARTED"             # step handed to the worker pool
+    STEP_STREAMING = "STEP_STREAMING"         # step is emitting chunks
+    STEP_CHUNK = "STEP_CHUNK"                 # one chunk emitted (see .chunk)
     STEP_SUCCEEDED = "STEP_SUCCEEDED"
     STEP_CACHED = "STEP_CACHED"               # outputs served from the store
     STEP_SKIPPED = "STEP_SKIPPED"             # couler.when condition false
@@ -21,7 +23,8 @@ class EventType(str, enum.Enum):
     WORKFLOW_DONE = "WORKFLOW_DONE"           # terminal; exactly one per run
 
 
-STEP_EVENTS = frozenset({EventType.STEP_STARTED, EventType.STEP_SUCCEEDED,
+STEP_EVENTS = frozenset({EventType.STEP_STARTED, EventType.STEP_STREAMING,
+                         EventType.STEP_CHUNK, EventType.STEP_SUCCEEDED,
                          EventType.STEP_CACHED, EventType.STEP_SKIPPED,
                          EventType.STEP_FAILED})
 
@@ -33,7 +36,8 @@ class WorkflowEvent:
     ``seq`` is a per-run monotonic counter (0 is always the admission
     event); ``status`` carries the step status for STEP_* events and the
     terminal run status ("Succeeded"/"Failed"/"Cancelled") for
-    WORKFLOW_DONE.
+    WORKFLOW_DONE. ``chunk`` is the 0-based chunk index for STEP_CHUNK
+    events (-1 otherwise).
     """
 
     type: EventType
@@ -43,6 +47,7 @@ class WorkflowEvent:
     step: str = ""
     status: str = ""
     error: str = ""
+    chunk: int = -1
     seq: int = -1
     ts: float = 0.0
 

@@ -24,14 +24,27 @@ The sync facade (``LocalEngine.submit``) funnels through this same path
 (``submit_nowait(block=True)`` + ``handle.result()``), so sync and async
 submissions produce identical ``WorkflowRun`` results.
 
-Caveats: ``submit()`` called *from inside a step function* of the same
+Streaming (``couler.run_stream`` / ``couler.map_stream``): for each
+streamed artifact consumed chunk-wise inside a part, ``_run_part`` builds
+an ``ArtifactChannel`` (bounded buffer + backpressure; see
+``gateway.channels``) and starts the consumer as soon as the producer
+emits its first chunk — the consumer's indegree contribution from that
+producer is credited early, while every other dependency still gates it
+normally. The in-flight-steps semaphore applies unchanged, so
+``max_inflight_steps`` must be at least the streaming pipeline depth or
+the stages cannot coexist (the channel's stall timeout turns that
+misconfiguration into a failed run rather than a hang). A run cancelled
+mid-stream interrupts blocked producers/consumers via the channel; the
+interrupted steps are reverted to ``Pending`` so the run stays
+resumable, replaying any chunk prefix already cached.
+
+Speculative straggler backups reserve a slot from the same semaphore via
+``try_reserve_step_slot`` (non-blocking; no spare slot means no backup),
+so ``peak_inflight_steps`` honours the bound with speculation included.
+
+Caveat: ``submit()`` called *from inside a step function* of the same
 engine occupies a pool worker while it waits; deeply nested blocking
 submissions can exhaust the pool — nest with ``submit_async`` instead.
-And the shared store's Couler policy scores against one attached
-workflow at a time, so interleaved workflows re-attach per part —
-thread-safe, but admission scores reflect the most recently attached
-DAG and each switch drops the scorer's memo (see the ROADMAP
-"multi-workflow cache scoring context" open item).
 """
 from __future__ import annotations
 
@@ -44,6 +57,8 @@ from typing import Dict, List, Optional, Set
 from repro.core.autosplit import schedule_parts, split_workflow
 from repro.core.engines.base import StepRecord, StepStatus, WorkflowRun
 from repro.core.gateway.admission import AdmissionQueue, AdmittedItem
+from repro.core.gateway.channels import (ArtifactChannel, StepContext,
+                                         StreamCancelled)
 from repro.core.gateway.events import EventType
 from repro.core.gateway.run import AsyncWorkflowRun
 from repro.core.ir import WorkflowIR
@@ -316,6 +331,38 @@ class WorkflowGateway:
             if k == 0:
                 ready.append(n)
 
+        # streaming channels: one per streamed artifact consumed chunk-wise
+        # in this part whose producer is also here and not yet satisfied;
+        # consumers of already-done (or out-of-part) producers fall back to
+        # the materialized artifact
+        channels: Dict[str, ArtifactChannel] = {}
+        by_producer: Dict[str, ArtifactChannel] = {}
+        early: Dict[str, Set[str]] = {}   # consumer -> early-startable preds
+        for n, j in wfp.jobs.items():
+            if n in done or not (j.stream_input and j.stream_arg):
+                continue
+            p = j.stream_arg.split(":")[0]
+            pj = wfp.jobs.get(p)
+            if pj is None or not pj.stream_output or p in done:
+                continue
+            ch = channels.get(j.stream_arg)
+            if ch is None:
+                ch = ArtifactChannel(j.stream_arg, producer=p,
+                                     capacity=pj.stream_buffer_chunks)
+                channels[j.stream_arg] = ch
+                by_producer[p] = ch
+            ch.expect_consumer(n)
+            # conditioned consumers cannot start before their predicate's
+            # artifact exists; they launch normally and read the channel
+            # history (or the materialized value) once ready
+            if j.condition is None:
+                early.setdefault(n, set()).add(p)
+        ctx = StepContext(channels=channels, publish=handle._publish)
+        if channels:
+            handle.add_cancel_callback(
+                lambda chans=tuple(channels.values()):
+                    [c.cancel() for c in chans])
+
         loop = asyncio.get_running_loop()
         # completion handling is inlined at the tail of each step task (the
         # loop is single-threaded, so no locking): each finished step costs
@@ -323,8 +370,22 @@ class WorkflowGateway:
         # only awaits one future resolved when the outstanding count drains
         state = {"failed": False, "outstanding": 0}
         part_done: asyncio.Future = loop.create_future()
+        # consumer->producer edges already credited by an early (first-chunk)
+        # start; finish_one must not decrement them a second time
+        credited: Set[tuple] = set()
 
         def finish_one(name: str, status: Optional[StepStatus]) -> None:
+            j = wfp.jobs.get(name)
+            if j is not None and j.stream_arg in channels:
+                # release the phantom cursor of a consumer that terminated
+                # without ever attaching (skipped / failed / cancelled)
+                channels[j.stream_arg].consumer_done(name)
+            chn = by_producer.get(name)
+            if chn is not None and status is not None and not chn.finished:
+                # the engine closes/aborts on every normal exit; this is
+                # belt-and-braces so readers never block on a dead producer
+                chn.abort(RuntimeError(
+                    f"{name} ended without closing its stream"))
             if status is not None:
                 if status == StepStatus.FAILED:
                     state["failed"] = True      # in-flight steps drain out
@@ -332,13 +393,32 @@ class WorkflowGateway:
                     done.add(name)
                     if not state["failed"] and not handle.cancel_requested:
                         for s in run.workflow.successors(name):
-                            if s in indeg and s not in done:
+                            if s in indeg and s not in done \
+                                    and (s, name) not in credited:
                                 indeg[s] -= 1
                                 if indeg[s] == 0:
                                     spawn(s)
             state["outstanding"] -= 1
             if state["outstanding"] == 0 and not part_done.done():
                 part_done.set_result(None)
+
+        def stream_ready(p: str) -> None:
+            # producer p emitted its first chunk (scheduled onto the loop,
+            # so serialized with finish_one): credit its edge to chunk-wise
+            # consumers now — every *other* dependency still gates them
+            if state["failed"] or handle.cancel_requested or p in done:
+                return
+            for s, ps in early.items():
+                if p in ps and (s, p) not in credited \
+                        and s in indeg and s not in done:
+                    credited.add((s, p))
+                    indeg[s] -= 1
+                    if indeg[s] == 0:
+                        spawn(s)
+
+        for p, chn in by_producer.items():
+            chn.on_first_chunk = (
+                lambda p=p: loop.call_soon_threadsafe(stream_ready, p))
 
         async def exec_one(name: str) -> None:
             status: Optional[StepStatus] = None
@@ -347,25 +427,30 @@ class WorkflowGateway:
                     if handle.cancel_requested:
                         return              # never launched: stays Pending
                     handle._publish(EventType.STEP_STARTED, step=name)
-                    self._inflight_steps += 1
-                    if self._inflight_steps > \
-                            self.stats["peak_inflight_steps"]:
-                        self.stats["peak_inflight_steps"] = \
-                            self._inflight_steps
+                    self._note_inflight(+1)
                     try:
                         status = await loop.run_in_executor(
-                            self._pool, eng._exec_step, wfp.jobs[name], run)
+                            self._pool, eng._exec_step, wfp.jobs[name], run,
+                            ctx)
+                    except StreamCancelled:
+                        # cancelled mid-stream: revert to Pending so the
+                        # run stays resumable; like a never-launched step
+                        # it gets no terminal event (taxonomy exception)
+                        run.steps[name] = StepRecord()
+                        status = None
                     except Exception as e:  # noqa: BLE001
                         rec = run.steps[name]
                         rec.error = f"{type(e).__name__}: {e}"
                         rec.status = StepStatus.FAILED
                         status = StepStatus.FAILED
                     finally:
-                        self._inflight_steps -= 1
-                    handle._publish(
-                        _EVENT_FOR_STATUS.get(status, EventType.STEP_FAILED),
-                        step=name, status=status.value,
-                        error=run.steps[name].error)
+                        self._note_inflight(-1)
+                    if status is not None:
+                        handle._publish(
+                            _EVENT_FOR_STATUS.get(status,
+                                                  EventType.STEP_FAILED),
+                            step=name, status=status.value,
+                            error=run.steps[name].error)
             finally:
                 finish_one(name, status)
 
@@ -378,6 +463,55 @@ class WorkflowGateway:
         if state["outstanding"]:
             await part_done
         return not state["failed"]
+
+    def _note_inflight(self, delta: int) -> None:
+        # loop-thread only (exec_one and the release callback both run on
+        # the gateway loop), so no locking
+        self._inflight_steps += delta
+        if self._inflight_steps > self.stats["peak_inflight_steps"]:
+            self.stats["peak_inflight_steps"] = self._inflight_steps
+
+    # -- speculation slot accounting (thread-safe) -------------------------
+    def try_reserve_step_slot(self, timeout: float = 2.0) -> bool:
+        """Try to reserve one in-flight-step slot from a worker thread
+        WITHOUT waiting for one to free up — used by the engine's straggler
+        speculation so backup copies count against the same
+        ``max_inflight_steps`` bound as scheduled steps. Returns False when
+        the bound is saturated (no backup launches) or the gateway is not
+        running; ``timeout`` only bounds the loop round-trip."""
+        loop = self._loop
+        if loop is None or self._closed or not self._started.is_set():
+            return False
+
+        async def _try() -> bool:
+            sem = self._step_sem
+            if sem is None or sem.locked():
+                return False
+            await sem.acquire()
+            self._note_inflight(+1)
+            return True
+
+        try:
+            return asyncio.run_coroutine_threadsafe(_try(), loop) \
+                .result(timeout)
+        except Exception:       # loop closing, or timed out: no slot
+            return False
+
+    def release_step_slot(self) -> None:
+        """Release a slot taken via ``try_reserve_step_slot``."""
+        loop = self._loop
+        if loop is None:
+            return
+
+        def _rel() -> None:
+            self._note_inflight(-1)
+            if self._step_sem is not None:
+                self._step_sem.release()
+
+        try:
+            loop.call_soon_threadsafe(_rel)
+        except RuntimeError:    # loop already closed: nothing to release
+            pass
 
     # -- background cache promotion ---------------------------------------
     async def _promote_loop(self) -> None:

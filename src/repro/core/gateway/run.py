@@ -19,7 +19,7 @@ import concurrent.futures as cf
 import itertools
 import threading
 import time
-from typing import AsyncIterator, List, Optional, Tuple
+from typing import AsyncIterator, Callable, List, Optional, Tuple
 
 from repro.core.engines.base import WorkflowRun
 from repro.core.gateway.events import EventType, WorkflowEvent
@@ -46,6 +46,7 @@ class AsyncWorkflowRun:
         self._history: List[WorkflowEvent] = []
         self._subs: List[Tuple[asyncio.AbstractEventLoop, asyncio.Queue]] = []
         self._cancel = threading.Event()
+        self._cancel_cbs: List[Callable[[], None]] = []
         self._seq = itertools.count()
 
     # -- awaiting ----------------------------------------------------------
@@ -76,11 +77,30 @@ class AsyncWorkflowRun:
         if self._result.done():
             return False
         self._cancel.set()
+        with self._lock:
+            cbs = list(self._cancel_cbs)
+        for cb in cbs:
+            try:
+                cb()
+            except Exception:
+                pass
         return True
 
     @property
     def cancel_requested(self) -> bool:
         return self._cancel.is_set()
+
+    def add_cancel_callback(self, cb: Callable[[], None]) -> None:
+        """Register a callback fired on ``cancel()`` (used by the gateway
+        to interrupt blocked artifact-channel producers/consumers so a
+        cancelled run drains instead of waiting out its streams). Called
+        immediately if cancellation was already requested; must be
+        thread-safe."""
+        with self._lock:
+            if not self._cancel.is_set():
+                self._cancel_cbs.append(cb)
+                return
+        cb()
 
     # -- event stream ------------------------------------------------------
     async def events(self) -> AsyncIterator[WorkflowEvent]:
@@ -116,12 +136,16 @@ class AsyncWorkflowRun:
 
     # -- gateway-internal publishing ---------------------------------------
     def _publish(self, type_: EventType, step: str = "", status: str = "",
-                 error: str = "") -> WorkflowEvent:
-        ev = WorkflowEvent(type=type_, workflow=self.workflow_name,
-                           run_id=self.run_id, tenant=self.tenant, step=step,
-                           status=status, error=error, seq=next(self._seq),
-                           ts=time.time())
+                 error: str = "", chunk: int = -1) -> WorkflowEvent:
+        # seq assignment and history append happen under one lock: chunk
+        # events arrive from worker threads concurrently with loop-thread
+        # lifecycle events, and history must stay seq-sorted
         with self._lock:
+            ev = WorkflowEvent(type=type_, workflow=self.workflow_name,
+                               run_id=self.run_id, tenant=self.tenant,
+                               step=step, status=status, error=error,
+                               chunk=chunk, seq=next(self._seq),
+                               ts=time.time())
             self._history.append(ev)
             dead = []
             for sub in self._subs:

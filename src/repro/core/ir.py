@@ -91,6 +91,14 @@ class Job:
     # loop metadata (exec_while)
     loop_condition: Optional[Condition] = None
     max_iterations: int = 16
+    # streaming metadata: a stream_output job's fn is a generator whose
+    # chunks flow through an ArtifactChannel; a stream_input job maps the
+    # chunks of the upstream artifact named by stream_arg. A non-streaming
+    # consumer of a streamed output sees the materialized list of chunks.
+    stream_output: bool = False
+    stream_input: bool = False
+    stream_arg: Optional[str] = None
+    stream_buffer_chunks: int = 8
 
     def spec_size_bytes(self) -> int:
         """Serialized-spec size of this job — the CRD-size budget component."""

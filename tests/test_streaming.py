@@ -1,0 +1,468 @@
+"""Streaming artifact pipelines: chunk ordering, backpressure, chunk-granular
+caching (partial hit + tail recompute), producer retry rewind, cancel
+mid-stream resumability, and the speculation in-flight-bound regression."""
+import asyncio
+import threading
+import time
+
+import pytest
+
+from repro.core import couler
+from repro.core.engines.base import StepStatus, TransientError
+from repro.core.engines.local import LocalEngine
+from repro.core.gateway.channels import (ArtifactChannel, StreamRewound,
+                                         StreamStalled)
+from repro.core.gateway.events import EventType
+
+
+def _engine(**kw):
+    kw.setdefault("enable_speculation", False)
+    kw.setdefault("promote_interval_s", 0.0)
+    return LocalEngine(**kw)
+
+
+def _pipeline(name, n_chunks=10, stages=3, cacheable=False, sleep=0.0,
+              gen=None):
+    """Linear run_stream -> map_stream^stages pipeline; returns (ir, expected
+    final chunk list)."""
+    if gen is None:
+        def gen():
+            for i in range(n_chunks):
+                if sleep:
+                    time.sleep(sleep)
+                yield i
+    with couler.workflow(name) as ir:
+        cur = couler.run_stream(gen, step_name="p", cacheable=cacheable)
+        for k in range(1, stages + 1):
+            fn = (lambda c, _k=k: (time.sleep(sleep), c * 2 + _k)[1]
+                  if sleep else c * 2 + _k)
+            cur = couler.map_stream(fn, cur, step_name=f"m{k}",
+                                    cacheable=cacheable)
+    expected = list(range(n_chunks))
+    for k in range(1, stages + 1):
+        expected = [c * 2 + k for c in expected]
+    return ir, expected
+
+
+# ---------------------------------------------------------------------------
+# chunk ordering / equivalence / fallback
+# ---------------------------------------------------------------------------
+
+def test_chunk_order_and_materialized_equality():
+    ir, expected = _pipeline("order", n_chunks=12, stages=3)
+    eng = _engine()
+    try:
+        run = eng.submit(ir, optimize=False)
+        assert run.status == "Succeeded"
+        assert run.artifacts["m3:out"] == expected
+        for n in ("p", "m1", "m2", "m3"):
+            assert run.steps[n].status is StepStatus.SUCCEEDED
+            assert run.steps[n].chunks_emitted == 12
+    finally:
+        eng.close()
+
+
+def test_non_streaming_consumer_sees_materialized_whole():
+    with couler.workflow("fallback") as ir:
+        src = couler.run_stream(lambda: iter(range(6)), step_name="p",
+                                cacheable=False)
+        couler.run_step(lambda xs: sum(xs), src, step_name="tot",
+                        cacheable=False)
+    eng = _engine()
+    try:
+        run = eng.submit(ir, optimize=False)
+        assert run.status == "Succeeded"
+        assert run.artifacts["p:out"] == list(range(6))
+        assert run.artifacts["tot:out"] == 15
+    finally:
+        eng.close()
+
+
+def test_streaming_event_invariants_and_overlap():
+    """Consumers start before the producer's terminal event; chunk events
+    sit strictly between their step's STARTED and terminal, indices 0..n-1
+    with STEP_STREAMING before the first chunk."""
+    ir, expected = _pipeline("events", n_chunks=8, stages=2, sleep=0.005)
+
+    async def main():
+        eng = _engine()
+        try:
+            h = await couler.run_async(submitter=eng, workflow_ir=ir,
+                                       optimize=False)
+            return [ev async for ev in h.events()], await h
+        finally:
+            eng.close()
+
+    evs, run = asyncio.run(main())
+    assert run.artifacts["m2:out"] == expected
+    seqs = [e.seq for e in evs]
+    assert seqs == sorted(seqs) == list(range(len(evs)))
+    for step in ("p", "m1", "m2"):
+        mine = [e for e in evs if e.step == step]
+        assert mine[0].type is EventType.STEP_STARTED
+        assert mine[-1].type is EventType.STEP_SUCCEEDED
+        inner = mine[1:-1]
+        assert inner[0].type is EventType.STEP_STREAMING
+        idx = [e.chunk for e in inner if e.type is EventType.STEP_CHUNK]
+        assert idx == list(range(8))
+    by_seq = {e.step: {"started": None, "terminal": None} for e in evs
+              if e.step}
+    for e in evs:
+        if e.type is EventType.STEP_STARTED:
+            by_seq[e.step]["started"] = e.seq
+        elif e.type is EventType.STEP_SUCCEEDED:
+            by_seq[e.step]["terminal"] = e.seq
+    # overlap: each consumer started before its producer finished
+    assert by_seq["m1"]["started"] < by_seq["p"]["terminal"]
+    assert by_seq["m2"]["started"] < by_seq["m1"]["terminal"]
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_bounds_producer_lead():
+    """A fast producer feeding a slow consumer is throttled to the channel
+    capacity: the generator can never run more than buffer+1 chunks ahead
+    of what the consumer has taken."""
+    emitted, consumed = [], []
+    lead = {"max": 0}
+
+    def fastgen():
+        for i in range(40):
+            lead["max"] = max(lead["max"], len(emitted) - len(consumed))
+            emitted.append(i)
+            yield i
+
+    def slow(c):
+        time.sleep(0.003)
+        consumed.append(c)
+        return c
+
+    with couler.workflow("bp") as ir:
+        src = couler.run_stream(fastgen, step_name="p", cacheable=False,
+                                buffer_chunks=3)
+        couler.map_stream(slow, src, step_name="m", cacheable=False)
+    eng = _engine()
+    try:
+        run = eng.submit(ir, optimize=False)
+        assert run.status == "Succeeded"
+        assert run.artifacts["m:out"] == list(range(40))
+        # put(i) blocks until lead < 3, so at yield time the producer is at
+        # most capacity+1 ahead of the slowest reader
+        assert lead["max"] <= 4, lead["max"]
+    finally:
+        eng.close()
+
+
+def test_channel_stall_raises_instead_of_hanging():
+    ch = ArtifactChannel("a:out", producer="p", capacity=1,
+                         stall_timeout_s=0.1)
+    ch.expect_consumer("never-attaches")
+    ch.put(0)
+    with pytest.raises(StreamStalled):
+        ch.put(1)
+
+
+def test_channel_rewind_signals_readers():
+    ch = ArtifactChannel("a:out", producer="p", capacity=8)
+    r = ch.reader("c")
+    ch.put("x")
+    assert next(r) == "x"
+    ch.rewind()
+    with pytest.raises(StreamRewound):
+        next(r)
+    r.close()
+    r2 = ch.reader("c")
+    ch.put("y")
+    ch.close(1)
+    assert list(r2) == ["y"]
+    assert ch.stats["rewinds"] == 1
+
+
+# ---------------------------------------------------------------------------
+# chunk-granular caching
+# ---------------------------------------------------------------------------
+
+def test_full_chunk_cache_hit_marks_step_cached():
+    calls = {"n": 0}
+
+    def gen():
+        calls["n"] += 1
+        yield from range(5)
+
+    def build():
+        with couler.workflow("cachewf") as ir:
+            src = couler.run_stream(gen, step_name="p")
+            couler.map_stream(lambda c: c + 1, src, step_name="m")
+        return ir
+
+    eng = _engine()
+    try:
+        r1 = eng.submit(build(), optimize=False)
+        assert r1.status == "Succeeded" and calls["n"] == 1
+        r2 = eng.submit(build(), optimize=False)
+        assert calls["n"] == 1                    # generator not re-invoked
+        assert r2.steps["p"].status is StepStatus.CACHED
+        assert r2.steps["m"].status is StepStatus.CACHED
+        assert r2.steps["p"].chunks_replayed == 5
+        assert r2.artifacts["m:out"] == [1, 2, 3, 4, 5]
+    finally:
+        eng.close()
+
+
+def test_partial_chunk_hit_replays_prefix_and_recomputes_tail():
+    calls = {"n": 0}
+
+    def gen():
+        calls["n"] += 1
+        yield from range(5)
+
+    def build():
+        with couler.workflow("partial") as ir:
+            src = couler.run_stream(gen, step_name="p")
+            couler.map_stream(lambda c: c * 10, src, step_name="m")
+        return ir
+
+    eng = _engine()
+    try:
+        r1 = eng.submit(build(), optimize=False)
+        assert r1.status == "Succeeded"
+        # evict the producer's tail chunks (keep the manifest + prefix)
+        store = eng.cache
+        victims = [n for n in store.items
+                   if "#c" in n and int(n.split("#c")[1]) >= 3]
+        assert victims
+        for name in victims:
+            t = store.find_tier(name)
+            t.remove(name, "evicted")
+        r2 = eng.submit(build(), optimize=False)
+        assert r2.status == "Succeeded"
+        assert r2.artifacts["m:out"] == [0, 10, 20, 30, 40]
+        assert calls["n"] == 2                    # tail needed the generator
+        p2 = r2.steps["p"]
+        assert p2.status is StepStatus.SUCCEEDED
+        assert p2.chunks_replayed == 3            # cached prefix
+        assert p2.chunks_emitted == 2             # recomputed tail
+    finally:
+        eng.close()
+
+
+def test_uncacheable_upstream_disables_consumer_chunk_cache():
+    """A consumer of an uncacheable stream cannot identify its input, so it
+    must not cache its own chunks (a stale hit would be wrong)."""
+    def build(base):
+        with couler.workflow("nokey") as ir:
+            src = couler.run_stream(lambda: iter([base, base + 1]),
+                                    step_name="p", cacheable=False)
+            couler.map_stream(lambda c: c * 2, src, step_name="m")
+        return ir
+
+    eng = _engine()
+    try:
+        r1 = eng.submit(build(10), optimize=False)
+        assert r1.artifacts["m:out"] == [20, 22]
+        r2 = eng.submit(build(50), optimize=False)
+        assert r2.artifacts["m:out"] == [100, 102]   # not a stale [20, 22]
+        assert r2.steps["m"].status is StepStatus.SUCCEEDED
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# retry rewind / cancel
+# ---------------------------------------------------------------------------
+
+def test_producer_transient_failure_rewinds_channel():
+    state = {"attempts": 0}
+    consumed_one = threading.Event()
+
+    def flaky():
+        state["attempts"] += 1
+        for i in range(5):
+            if state["attempts"] == 1 and i == 2:
+                # wait until the consumer has read a chunk, so the rewind
+                # deterministically interrupts an in-flight reader
+                consumed_one.wait(2.0)
+                raise TransientError("ConnectionReset mid-stream")
+            yield i
+
+    def sq(c):
+        consumed_one.set()
+        return c * c
+
+    with couler.workflow("rewind") as ir:
+        src = couler.run_stream(flaky, step_name="p", cacheable=False,
+                                retry_limit=3)
+        couler.map_stream(sq, src, step_name="m", cacheable=False)
+    eng = _engine()
+    try:
+        run = eng.submit(ir, optimize=False)
+        assert run.status == "Succeeded"
+        assert run.artifacts["m:out"] == [0, 1, 4, 9, 16]
+        assert state["attempts"] == 2
+        assert run.steps["p"].attempts == 2
+        # the consumer restarted on the rewind without burning retry budget
+        assert run.steps["m"].attempts >= 2
+        assert run.steps["m"].chunks_emitted == 5
+    finally:
+        eng.close()
+
+
+def test_permanent_producer_failure_fails_consumer_too():
+    def broken():
+        yield 0
+        raise ValueError("hard failure")
+
+    with couler.workflow("hardfail") as ir:
+        src = couler.run_stream(broken, step_name="p", cacheable=False,
+                                retry_limit=1)
+        couler.map_stream(lambda c: c, src, step_name="m", cacheable=False)
+    eng = _engine()
+    try:
+        run = eng.submit(ir, optimize=False)
+        assert run.status == "Failed"
+        assert run.steps["p"].status is StepStatus.FAILED
+        assert run.steps["m"].status is StepStatus.FAILED
+        assert "StreamBroken" in run.steps["m"].error
+    finally:
+        eng.close()
+
+
+def test_cancel_mid_stream_leaves_run_resumable():
+    gate = threading.Event()
+
+    def slowgen():
+        for i in range(20):
+            if i == 3:
+                gate.set()
+            time.sleep(0.005)
+            yield i
+
+    def build():
+        with couler.workflow("cancelwf") as ir:
+            src = couler.run_stream(slowgen, step_name="p", cacheable=False)
+            couler.map_stream(lambda c: c + 100, src, step_name="m",
+                              cacheable=False)
+        return ir
+
+    eng = _engine()
+    try:
+        ir = build()
+
+        async def main():
+            h = await couler.run_async(submitter=eng, workflow_ir=ir,
+                                       optimize=False)
+            await asyncio.get_running_loop().run_in_executor(None, gate.wait)
+            assert h.cancel()
+            return await h
+
+        run = asyncio.run(main())
+        assert run.status == "Cancelled"
+        # mid-stream steps reverted to Pending: the run is resumable
+        assert all(r.status is StepStatus.PENDING
+                   for r in run.steps.values())
+        resumed = eng.resume(run)
+        assert resumed.status == "Succeeded"
+        assert resumed.artifacts["m:out"] == [i + 100 for i in range(20)]
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: speculation bound + concurrent scoring contexts
+# ---------------------------------------------------------------------------
+
+def test_speculation_respects_max_inflight_steps():
+    """Straggler backups draw from the gateway's in-flight-step semaphore:
+    with the bound saturated no backup launches; with slack the backup
+    launches, is counted, and the bound still holds."""
+    def straggle(tag):
+        time.sleep(0.3)
+        return tag
+
+    def build(name):
+        with couler.workflow(name) as ir:
+            couler.run_step(straggle, name, step_name="s", cacheable=False,
+                            est_time_s=0.02)
+        return ir
+
+    # saturated: two straggler steps occupy both slots -> no backups
+    eng = LocalEngine(max_workers=4, max_inflight_steps=2,
+                      straggler_factor=1.0, promote_interval_s=0.0)
+    try:
+        async def both():
+            h1 = await couler.run_async(submitter=eng,
+                                        workflow_ir=build("w1"),
+                                        optimize=False)
+            h2 = await couler.run_async(submitter=eng,
+                                        workflow_ir=build("w2"),
+                                        optimize=False)
+            return await h1, await h2
+
+        r1, r2 = asyncio.run(both())
+        assert r1.status == r2.status == "Succeeded"
+        assert eng.gateway.stats["peak_inflight_steps"] <= 2
+        assert not r1.steps["s"].speculative
+        assert not r2.steps["s"].speculative
+    finally:
+        eng.close()
+
+    # slack: the backup launches and counts against the bound
+    eng2 = LocalEngine(max_workers=4, max_inflight_steps=4,
+                       straggler_factor=1.0, promote_interval_s=0.0)
+    try:
+        r = eng2.submit(build("w3"), optimize=False)
+        assert r.steps["s"].speculative
+        gw = eng2.gateway
+        assert gw.stats["peak_inflight_steps"] == 2   # step + its backup
+        deadline = time.time() + 2.0
+        while gw._inflight_steps and time.time() < deadline:
+            time.sleep(0.01)
+        assert gw._inflight_steps == 0                # slot released
+    finally:
+        eng2.close()
+
+
+def test_concurrent_workflows_keep_independent_scoring_contexts():
+    """Artifacts offered with workflow= score against their own DAG even
+    when another workflow was attached afterwards, and re-attaching
+    registered workflows no longer bumps the store epoch (the thrash)."""
+    from repro.core.cache.policies import CoulerPolicy
+    from repro.core.cache.store import CacheStore
+
+    def fan(name, width):
+        with couler.workflow(name) as ir:
+            mid = couler.run_step(lambda: 1, step_name="mid")
+            for i in range(width):
+                couler.run_step(lambda x: x, mid, step_name=f"c{i}")
+        return ir
+
+    w_wide, w_narrow = fan("wide", 6), fan("narrow", 1)
+    store = CacheStore(capacity_bytes=1 << 20, policy=CoulerPolicy())
+    store.attach_workflow(w_wide)
+    store.attach_workflow(w_narrow)
+    store.offer("a-wide", b"x" * 64, compute_time_s=1.0, producer="mid",
+                workflow=w_wide)
+    store.offer("a-narrow", b"x" * 64, compute_time_s=1.0, producer="mid",
+                workflow=w_narrow)
+    s_wide = store.policy.score(store.items["a-wide"], store)
+    s_narrow = store.policy.score(store.items["a-narrow"], store)
+    # same producer name, different DAGs: the wide fan-out has far more
+    # Eq. 4 reuse value, which per-context scoring must preserve
+    assert s_wide > s_narrow
+
+    # equality with a dedicated single-workflow store (no cross-talk)
+    solo = CacheStore(capacity_bytes=1 << 20, policy=CoulerPolicy())
+    solo.attach_workflow(w_wide)
+    solo.offer("a-wide", b"x" * 64, compute_time_s=1.0, producer="mid",
+               workflow=w_wide)
+    assert store.policy.score(store.items["a-wide"], store) == \
+        pytest.approx(solo.policy.score(solo.items["a-wide"], solo))
+
+    # the thrash is gone: alternating attach of registered workflows is free
+    epoch = store._epoch
+    for _ in range(5):
+        store.attach_workflow(w_wide)
+        store.attach_workflow(w_narrow)
+    assert store._epoch == epoch
