@@ -1,0 +1,98 @@
+"""Static-analysis overhead: the submission-time lint gate must be noise.
+
+Two claims pinned here (see docs/diagnostics.md):
+
+* ``analysis_overhead`` — linting the RQ1 throughput population (n small
+  workflows, same generator as ``bench_throughput``) costs < 2% of the
+  event-driven ``submit_many`` wall time at n=2000, so the default
+  ``lint="error"`` gate does not move the scheduler-throughput numbers.
+* ``scaling`` — lint wall time is O(V+E): microseconds per job stay flat
+  as a single workflow grows from ~50 to ~3200 steps.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import Dict, List
+
+from benchmarks.bench_throughput import _clusters, _small_wf
+from repro.core.analysis import lint
+from repro.core.engines.cluster import MultiClusterEngine
+from repro.core.ir import Job, WorkflowIR
+
+
+def _big_wf(k: int, rng: random.Random) -> WorkflowIR:
+    """One deep workflow of k jobs: a chain plus ~0.3 skip edges/job."""
+    wf = WorkflowIR(f"scale-{k}")
+    for s in range(k):
+        wf.add_job(Job(name=f"s{s}"))
+        if s:
+            wf.add_edge(f"s{s - 1}", f"s{s}")
+        if s >= 2 and rng.random() < 0.3:
+            wf.add_edge(f"s{rng.randrange(s - 1)}", f"s{s}")
+    return wf
+
+
+def run(n_workflows: int = 2000, seed: int = 0,
+        sizes=(50, 200, 800, 3200)) -> List[Dict]:
+    rng = random.Random(seed)
+    pop = [(_small_wf(i, rng), f"user{i % 50}", rng.randint(0, 3))
+           for i in range(n_workflows)]
+    clusters = _clusters()
+
+    lint_wall, n_err = 1e9, 0
+    for _rep in range(3):               # best-of-3: one sweep is ~15 ms
+        for wf, _user, _prio in pop:
+            wf._topo_cache = None
+        t0 = time.perf_counter()
+        n_err = 0
+        for wf, _user, _prio in pop:
+            n_err += len(lint(wf, clusters=clusters,
+                              max_inflight_steps=64).errors)
+        lint_wall = min(lint_wall, time.perf_counter() - t0)
+
+    eng = MultiClusterEngine(clusters=clusters)
+    t0 = time.perf_counter()
+    runs = eng.submit_many(pop, lint="off")   # pure scheduling wall
+    submit_wall = time.perf_counter() - t0
+    overhead_pct = 100.0 * lint_wall / submit_wall
+    rows = [{
+        "scenario": "analysis_overhead",
+        "n_workflows": n_workflows,
+        "lint_errors": n_err,
+        "succeeded": sum(r.succeeded() for r in runs.values()),
+        "lint_wall_s": round(lint_wall, 4),
+        "submit_wall_s": round(submit_wall, 3),
+        "overhead_pct": round(overhead_pct, 3),
+        "overhead_under_2pct": overhead_pct < 2.0,
+    }]
+
+    per_job = {}
+    for k in sizes:
+        wf = _big_wf(k, random.Random(seed + k))
+        wall = min(_timed_lint(wf) for _ in range(3))
+        per_job[k] = 1e6 * wall / k
+        rows.append({
+            "scenario": "scaling",
+            "n_jobs": k,
+            "n_edges": len(wf.edges),
+            "lint_ms": round(wall * 1e3, 3),
+            "us_per_job": round(per_job[k], 3),
+        })
+    # O(V+E): per-job cost must not grow with size (compare against the
+    # mid size; the smallest is constant-overhead dominated)
+    rows[0]["linear_ok"] = per_job[sizes[-1]] < 3.0 * per_job[sizes[1]]
+    return rows
+
+
+def _timed_lint(wf: WorkflowIR) -> float:
+    wf._topo_cache = None              # defeat cross-repeat cache priming
+    t0 = time.perf_counter()
+    res = lint(wf, clusters=_clusters(), max_inflight_steps=1 << 20)
+    assert res.ok(), [str(d) for d in res.errors]
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -48,6 +48,10 @@ SUITES = [
          all(r["within_crd_budget"] for r in rows))),
     ("throughput_rq1", "benchmarks.bench_throughput", {"n_workflows": 300},
      lambda rows: "workflows_per_s=" + str(rows[0]["workflows_per_s"])),
+    ("analysis_overhead", "benchmarks.bench_analysis", {"n_workflows": 2000},
+     lambda rows: "lint_pct_of_submit=%s_under_2pct=%s_linear=%s" % (
+         rows[0]["overhead_pct"], rows[0]["overhead_under_2pct"],
+         rows[0]["linear_ok"])),
     ("gateway_concurrency", "benchmarks.bench_gateway",
      {"sizes": (100, 500)},
      lambda rows: "speedup_n%d=%sx_bounded=%s" % (

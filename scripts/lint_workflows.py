@@ -1,0 +1,180 @@
+"""CI lint gate: statically analyze every example / benchmark / NL2WF
+workflow and exit nonzero if any produces an ERROR diagnostic.
+
+The corpus (``collect_workflows``) covers each front workflows arrive
+from — hand-written unified-API programs (the examples' DAG shapes),
+benchmark workloads, SQLFlow translation, and LLM-generated NL2WF
+programs — so a lint pass regression that would start rejecting valid
+workflows (false positives) fails CI immediately. Warnings are reported
+but do not fail the gate.
+
+    PYTHONPATH=src python scripts/lint_workflows.py       # -v for detail
+
+Also callable in-process: ``run_gate()`` returns
+``(n_workflows, n_errors, n_warnings)`` (used by scripts/sanity.py).
+"""
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.core import couler  # noqa: E402
+from repro.core.ir import WorkflowIR  # noqa: E402
+
+
+def _example_diamond() -> WorkflowIR:
+    with couler.workflow("diamond") as ir:
+        def job(name):
+            return couler.run_container(
+                image="docker/whalesay:latest", command=["cowsay"],
+                args=[name], step_name=name, fn=lambda n=name: f"[{n}]")
+        couler.dag([
+            [lambda: job("A")],
+            [lambda: job("A"), lambda: job("B")],
+            [lambda: job("A"), lambda: job("C")],
+            [lambda: job("B"), lambda: job("D")],
+            [lambda: job("C"), lambda: job("D")],
+        ])
+    return ir
+
+
+def _example_coinflip() -> WorkflowIR:
+    state = {"flips": 0}
+
+    def flip_coin():
+        state["flips"] += 1
+        return "heads" if state["flips"] >= 3 else "tails"
+
+    with couler.workflow("coinflip") as ir:
+        r = couler.run_step(flip_coin, step_name="flip")
+        couler.exec_while(couler.equal(r, "tails"), lambda: r)
+        couler.when(couler.equal(r, "heads"),
+                    lambda: couler.run_step(lambda: "it was heads",
+                                            step_name="announce"))
+    return ir
+
+
+def _example_automl() -> WorkflowIR:
+    # same DAG shape as examples/automl_pipeline.py (hyperparameter
+    # dicts stand in for the tune() result — the IR is identical)
+    from repro.core.autotune import train_real_model
+    ours = {"learning_rate": 3e-4, "batch_size": 32, "weight_decay": 0.01}
+    base = {"learning_rate": 1e-4, "batch_size": 64, "weight_decay": 0.0}
+    with couler.workflow("automl") as ir:
+        outs = couler.concurrent([
+            lambda: couler.run_step(train_real_model, ours,
+                                    step_name="train-ours", est_time_s=30),
+            lambda: couler.run_step(train_real_model, base,
+                                    step_name="train-baseline",
+                                    est_time_s=30),
+        ])
+        couler.run_step(
+            lambda a, b: a if a["final_loss"] < b["final_loss"] else b,
+            outs[0], outs[1], step_name="select")
+    return ir
+
+
+def _example_train_lm() -> WorkflowIR:
+    # the examples/train_lm.py chain shape (stub fns; flags preserved)
+    with couler.workflow("train-lm") as ir:
+        corpus = couler.run_step(lambda: "corpus",
+                                 step_name="prepare-corpus", est_time_s=0.5)
+        result = couler.run_step(lambda c, n: {"first": 1.0, "last": 0.5},
+                                 corpus, 10, step_name="train",
+                                 cacheable=False, est_time_s=60.0)
+        couler.run_step(lambda r: r["last"] < r["first"], result,
+                        step_name="evaluate")
+    return ir
+
+
+def _example_streaming() -> WorkflowIR:
+    with couler.workflow("stream-pipeline") as ir:
+        cur = couler.run_stream(lambda: iter(range(8)), step_name="p",
+                                cacheable=False)
+        for k in range(3):
+            cur = couler.map_stream(lambda c, _k=k: c + _k, cur,
+                                    step_name=f"m{k}", cacheable=False)
+    return ir
+
+
+def _sqlflow_workflows() -> List[WorkflowIR]:
+    from repro.core.sqlflow import to_workflow
+    train = """
+SELECT * FROM iris.train
+TO TRAIN DNNClassifier
+WITH model.n_classes = 3, model.hidden_units = [10]
+COLUMN sepal_len, sepal_width, petal_length, petal_width
+LABEL class
+INTO sqlflow_models.my_dnn_model;
+"""
+    predict = """
+SELECT * FROM iris.test
+TO PREDICT iris.predict.class
+USING sqlflow_models.my_dnn_model;
+"""
+    return [to_workflow(train, name="sqlflow-train"),
+            to_workflow(predict, name="sqlflow-predict")]
+
+
+def _bench_workloads() -> List[WorkflowIR]:
+    from benchmarks.workloads import build_scenario
+    return [build_scenario(n, scale=0.2, seed=0)
+            for n in ("multimodal", "image_seg", "lm_finetune")]
+
+
+def _nl2wf_corpus() -> List[WorkflowIR]:
+    """Successfully generated NL2WF workflows (paper §III corpus): every
+    one the generator managed to build must lint error-free."""
+    from benchmarks.bench_nl2wf import SUITE
+    from repro.core.llm import TemplateLLM
+    from repro.core.nl2wf import nl_to_workflow
+    out = []
+    for i, (desc, _grader) in enumerate(SUITE):
+        for seed in range(2):
+            res = nl_to_workflow(desc, TemplateLLM("gpt-4"), seed=seed,
+                                 temperature=0.0)
+            if res.workflow is not None:
+                res.workflow.name = f"nl2wf-{i}-s{seed}"
+                out.append(res.workflow)
+    return out
+
+
+def collect_workflows() -> List[WorkflowIR]:
+    wfs = [_example_diamond(), _example_coinflip(), _example_automl(),
+           _example_train_lm(), _example_streaming()]
+    wfs += _sqlflow_workflows()
+    wfs += _bench_workloads()
+    wfs += _nl2wf_corpus()
+    return wfs
+
+
+def run_gate(verbose: bool = True) -> Tuple[int, int, int]:
+    """Lint the whole corpus; returns (n_workflows, n_errors, n_warnings)."""
+    from repro.core.analysis import lint
+    n_err = n_warn = 0
+    wfs = collect_workflows()
+    for wf in wfs:
+        res = lint(wf)
+        n_err += len(res.errors)
+        n_warn += len(res.warnings)
+        status = ("ERROR" if res.errors
+                  else "warn " if res.warnings else "ok   ")
+        if verbose or res.errors:
+            print(f"{status} {wf.name:24s} jobs={len(wf.jobs):3d} "
+                  f"edges={len(wf.edges):3d}", flush=True)
+            for d in res.diagnostics:
+                print(f"      {d}")
+    return len(wfs), n_err, n_warn
+
+
+def main() -> int:
+    verbose = "-v" in sys.argv or "--verbose" in sys.argv
+    n_wf, n_err, n_warn = run_gate(verbose=verbose)
+    print(f"linted {n_wf} workflows: {n_err} error(s), {n_warn} warning(s)")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,19 +62,19 @@ def cache_tier_sanity() -> bool:
 
 def gateway_event_sanity() -> bool:
     """Fuzz: random DAGs (some randomly cancelled mid-flight) through the
-    asyncio gateway; every run's event stream must satisfy the ordering
-    invariants — ADMITTED first, exactly one terminal DONE last, STEP_*
-    only in between, and each step's terminal event preceded by its own
-    STEP_STARTED (see repro.core.gateway)."""
+    asyncio gateway. Every run's event stream is validated twice by the
+    shared executable spec (repro.core.analysis.TraceChecker): inline at
+    each publish (check_events=True sanitizer mode) and post-hoc over the
+    collected stream."""
     import asyncio
 
+    from repro.core.analysis import TraceChecker
     from repro.core.engines.local import LocalEngine
-    from repro.core.gateway import EventType
     from repro.core.ir import Job, WorkflowIR
 
     rng = random.Random(0)
     eng = LocalEngine(max_workers=4, enable_speculation=False,
-                      promote_interval_s=0.0)
+                      promote_interval_s=0.0, check_events=True)
 
     def build(i: int) -> WorkflowIR:
         wf = WorkflowIR(f"fuzz-{i}")
@@ -89,7 +89,8 @@ def gateway_event_sanity() -> bool:
         return wf
 
     async def one(i: int) -> None:
-        h = await eng.submit_async(build(i), tenant=f"t{i % 3}", block=True)
+        wf = build(i)
+        h = await eng.submit_async(wf, tenant=f"t{i % 3}", block=True)
         if rng.random() < 0.3:
             delay = rng.uniform(0, 0.01)
 
@@ -98,16 +99,7 @@ def gateway_event_sanity() -> bool:
                 h.cancel()
             asyncio.get_running_loop().create_task(canceller())
         evs = [ev async for ev in h.events()]
-        assert evs[0].type is EventType.WORKFLOW_ADMITTED, evs[0]
-        assert evs[-1].terminal, evs[-1]
-        assert sum(1 for e in evs if e.terminal) == 1, evs
-        assert all(e.is_step_event for e in evs[1:-1]), evs
-        seen_started = set()
-        for e in evs[1:-1]:
-            if e.type is EventType.STEP_STARTED:
-                seen_started.add(e.step)
-            else:
-                assert e.step in seen_started, (e, "terminal before STARTED")
+        TraceChecker.check(evs, wf=wf)
         run = await h
         assert run.status in ("Succeeded", "Failed", "Cancelled"), run.status
         assert evs[-1].status == run.status, (evs[-1], run.status)
@@ -129,20 +121,20 @@ def gateway_event_sanity() -> bool:
 
 def streaming_event_sanity() -> bool:
     """Fuzz: random LINEAR streaming pipelines (run_stream -> map_stream^k,
-    some randomly cancelled mid-stream) through the gateway; on top of the
-    base ordering invariants, each step's STEP_CHUNK indices must be
-    0,1,2,… within an attempt (monotone, resetting only on a rewind) with
-    STEP_STREAMING before the first chunk, and a consumer never starts
-    before its producer's STEP_STREAMING (see repro.core.gateway)."""
+    some randomly cancelled mid-stream) through the gateway. Stream/chunk
+    ordering (STREAMING before chunks, monotone indices resetting only on
+    rewind, consumers never ahead of their producer's STREAMING) is
+    validated by the shared TraceChecker — inline via check_events=True
+    and post-hoc with workflow topology for the invariant-6 check."""
     import asyncio
 
     from repro.core import couler
+    from repro.core.analysis import TraceChecker
     from repro.core.engines.local import LocalEngine
-    from repro.core.gateway import EventType
 
     rng = random.Random(1)
     eng = LocalEngine(max_workers=6, enable_speculation=False,
-                      promote_interval_s=0.0)
+                      promote_interval_s=0.0, check_events=True)
 
     def build(i: int):
         n_chunks = rng.randint(3, 10)
@@ -174,28 +166,8 @@ def streaming_event_sanity() -> bool:
             asyncio.get_running_loop().create_task(canceller())
         evs = [ev async for ev in h.events()]
         run = await h
-        assert evs[0].type is EventType.WORKFLOW_ADMITTED, evs[0]
-        assert evs[-1].terminal and evs[-1].status == run.status, evs[-1]
-        assert sum(1 for e in evs if e.terminal) == 1, evs
-        started, streaming, terminal, chunks = set(), set(), set(), {}
-        for e in evs[1:-1]:
-            assert e.is_step_event, e
-            if e.type is EventType.STEP_STARTED:
-                started.add(e.step)
-            elif e.type is EventType.STEP_STREAMING:
-                assert e.step in started, (e, "STREAMING before STARTED")
-                assert e.step not in terminal, e
-                streaming.add(e.step)
-            elif e.type is EventType.STEP_CHUNK:
-                assert e.step in streaming, (e, "CHUNK before STREAMING")
-                assert e.step not in terminal, e
-                prev = chunks.get(e.step, -1)
-                # monotone +1 within an attempt; reset only via rewind
-                assert e.chunk == prev + 1 or e.chunk == 0, (e, prev)
-                chunks[e.step] = e.chunk
-            else:
-                assert e.step in started, (e, "terminal before STARTED")
-                terminal.add(e.step)
+        assert evs[-1].status == run.status, (evs[-1], run.status)
+        TraceChecker.check(evs, wf=ir)
         if run.status == "Succeeded":
             job = "p" if stages == 0 else f"m{stages - 1}"
             exp = [c + stages for c in range(n_chunks)]
@@ -216,9 +188,28 @@ def streaming_event_sanity() -> bool:
     return True
 
 
+def workflow_lint_sanity() -> bool:
+    """CI lint gate: every example/bench/NL2WF workflow must lint with
+    zero errors (scripts/lint_workflows.py has the corpus)."""
+    import lint_workflows
+    try:
+        n_wf, n_err, n_warn = lint_workflows.run_gate(verbose=False)
+    except Exception as e:  # noqa: BLE001
+        print(f"FAIL workflow_lint {type(e).__name__}: {e}")
+        traceback.print_exc()
+        return False
+    if n_err:
+        print(f"FAIL workflow_lint {n_err} error(s) across {n_wf} workflows")
+        return False
+    print(f"OK   workflow_lint {n_wf} workflows, 0 errors, "
+          f"{n_warn} warning(s)")
+    return True
+
+
 ok = cache_tier_sanity() and ok
 ok = gateway_event_sanity() and ok
 ok = streaming_event_sanity() and ok
+ok = workflow_lint_sanity() and ok
 for aid in only:
     spec = get_arch(aid)
     cfg = reduced(spec.model).replace(param_dtype="float32",

@@ -211,23 +211,34 @@ def not_equal(a, b=None) -> Condition:
 
 
 def when(cond: Condition, then: Callable[[], StepOutput]) -> StepOutput:
-    """Conditional step (paper code 3): `then()` runs iff cond holds."""
+    """Conditional step (paper code 3): `then()` runs iff cond holds.
+
+    The condition's artifact must already have a producing step —
+    a missing producer raises here (CLR003) instead of silently
+    evaluating the predicate over ``None`` mid-run."""
     out = then()
-    job = _wf().jobs[out.job_name]
+    wf = _wf()
+    job = wf.jobs[out.job_name]
     job.condition = cond
+    wf.check_condition_producers(job)
     src = cond.artifact.split(":")[0]
-    if src in _wf().jobs and src != out.job_name:
-        _wf().add_edge(src, out.job_name)
+    if src in wf.jobs and src != out.job_name:
+        wf.add_edge(src, out.job_name)
     return out
 
 
 def exec_while(cond: Condition, body: Callable[[], StepOutput],
                max_iterations: int = 16) -> StepOutput:
-    """Recursive step (paper code 5): re-run body while cond holds."""
+    """Recursive step (paper code 5): re-run body while cond holds.
+
+    Like ``when``, the loop condition is validated eagerly (CLR003);
+    conditioning on the body step's own output is the normal case."""
     out = body()
-    job = _wf().jobs[out.job_name]
+    wf = _wf()
+    job = wf.jobs[out.job_name]
     job.loop_condition = cond
     job.max_iterations = max_iterations
+    wf.check_condition_producers(job)
     return out
 
 
@@ -278,6 +289,21 @@ def create_parameter_artifact(path: str = "", is_global: bool = False):
         def __init__(self, p):
             self.path = p
     return _Art(path)
+
+
+def lint(workflow_ir: Optional[WorkflowIR] = None, *, engine=None,
+         clusters=None, max_inflight_steps: Optional[int] = None):
+    """Statically analyze a workflow (the current one by default).
+
+    Returns a ``repro.core.analysis.LintResult`` of typed ``CLR0xx``
+    diagnostics — cycles, orphans, conditions on unproduced artifacts,
+    streaming misuse, unschedulable resource requests, nondeterministic
+    cacheable steps (see ``docs/diagnostics.md``). Engines run the same
+    passes automatically at submit time (``lint="error"|"warn"|"off"``).
+    """
+    from repro.core.analysis import lint as _lint
+    return _lint(workflow_ir or _wf(), engine=engine, clusters=clusters,
+                 max_inflight_steps=max_inflight_steps)
 
 
 def run(submitter=None, workflow_ir: Optional[WorkflowIR] = None,

@@ -90,6 +90,23 @@ class Engine:
     def submit(self, wf: WorkflowIR, optimize: bool = True, **kw) -> WorkflowRun:
         raise NotImplementedError
 
+    # -- static analysis ---------------------------------------------------
+    def lint_context(self) -> Dict[str, Any]:
+        """Capacity facts this engine contributes to the workflow linter
+        (``repro.core.analysis``): e.g. ``clusters`` enables the CLR005
+        fit check, ``max_inflight_steps`` the CLR006 streaming-depth
+        check. The base engine knows nothing."""
+        return {}
+
+    def lint(self, wf: WorkflowIR, **overrides):
+        """Lint ``wf`` with this engine's deployment context; returns a
+        ``LintResult``. Submission paths run the same passes as a gate
+        (``lint="error"|"warn"|"off"`` on ``submit``/``submit_async``)."""
+        from repro.core.analysis import lint as _lint
+        ctx = self.lint_context()
+        ctx.update(overrides)
+        return _lint(wf, **ctx)
+
     def resume(self, run: WorkflowRun, **kw) -> WorkflowRun:
         """Restart from failure: re-submit, skipping Succeeded/Skipped/Cached."""
         raise NotImplementedError

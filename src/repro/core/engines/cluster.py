@@ -241,12 +241,23 @@ class MultiClusterEngine(Engine):
                                 producer=p, nbytes=nbytes)
         return total
 
-    def submit_many(self, workflows: List[Tuple[WorkflowIR, str, int]]
-                    ) -> Dict[str, WorkflowRun]:
+    def lint_context(self):
+        return {"clusters": self.clusters}
+
+    def submit_many(self, workflows: List[Tuple[WorkflowIR, str, int]],
+                    lint: str = "error") -> Dict[str, WorkflowRun]:
         """Simulate scheduling a batch of (workflow, user, priority).
 
-        Returns runs keyed by workflow name; self.metrics aggregates
-        utilization & makespan."""
+        Each workflow is linted against this engine's clusters first: a
+        job that fits NO cluster (CLR005) rejects its workflow up front
+        instead of pinning it Pending in the queue forever
+        (``lint="warn"|"off"`` restores the old behavior). Returns runs
+        keyed by workflow name; self.metrics aggregates utilization &
+        makespan."""
+        if lint != "off":
+            from repro.core.analysis import lint_gate
+            for wf, _user, _prio in workflows:
+                lint_gate(wf, mode=lint, clusters=self.clusters)
         queue: List[_QItem] = []
         for wf, user, prio in workflows:
             wf.validate()
@@ -383,8 +394,8 @@ class MultiClusterEngine(Engine):
         return runs
 
     def submit(self, wf: WorkflowIR, optimize: bool = True, user: str = "u0",
-               priority: int = 0, **kw) -> WorkflowRun:
-        return self.submit_many([(wf, user, priority)])[wf.name]
+               priority: int = 0, lint: str = "error", **kw) -> WorkflowRun:
+        return self.submit_many([(wf, user, priority)], lint=lint)[wf.name]
 
     def submit_admitted(self, queue, max_n: Optional[int] = None
                         ) -> Dict[str, WorkflowRun]:

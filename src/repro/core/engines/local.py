@@ -87,7 +87,8 @@ class LocalEngine(Engine):
                  max_inflight_steps: Optional[int] = None,
                  max_inflight_workflows: Optional[int] = None,
                  promote_interval_s: float = 0.25,
-                 admission=None):
+                 admission=None,
+                 check_events: bool = False):
         self.max_workers = max_workers
         self.cache = cache if cache is not None else CacheStore(
             capacity_bytes=1 << 30, policy=CoulerPolicy())
@@ -105,7 +106,8 @@ class LocalEngine(Engine):
         self._gateway_opts = dict(max_inflight_steps=max_inflight_steps,
                                   max_inflight_workflows=max_inflight_workflows,
                                   promote_interval_s=promote_interval_s,
-                                  admission=admission)
+                                  admission=admission,
+                                  check_events=check_events)
 
     # ------------------------------------------------------------------
     @property
@@ -121,19 +123,26 @@ class LocalEngine(Engine):
                 gw = self._gateway
         return gw
 
+    def lint_context(self):
+        bound = self._gateway_opts["max_inflight_steps"] or \
+            2 * self.max_workers
+        return {"max_inflight_steps": bound}
+
     def submit(self, wf: WorkflowIR, optimize: bool = True,
                tenant: str = "default", priority: int = 0,
-               **kw) -> WorkflowRun:
-        """Sync facade: enqueue on the gateway (blocking for queue space
-        instead of shedding) and wait for the finished ``WorkflowRun``."""
+               lint: str = "error", **kw) -> WorkflowRun:
+        """Sync facade: lint + enqueue on the gateway (blocking for queue
+        space instead of shedding) and wait for the finished
+        ``WorkflowRun``. Lint errors raise ``WorkflowLintError`` before
+        anything is enqueued (``lint="warn"|"off"`` to opt out)."""
         handle = self.gateway.submit_nowait(wf, optimize=optimize,
                                             tenant=tenant, priority=priority,
-                                            block=True)
+                                            block=True, lint=lint)
         return handle.result()
 
     async def submit_async(self, wf: WorkflowIR, optimize: bool = True,
                            tenant: str = "default", priority: int = 0,
-                           block: bool = False, **kw):
+                           block: bool = False, lint: str = "error", **kw):
         """Native async path: admit ``wf`` into the gateway and return its
         ``AsyncWorkflowRun`` (await it, stream ``.events()``, or
         ``.cancel()``). Raises ``QueueFull`` when the tenant's admission
@@ -145,14 +154,14 @@ class LocalEngine(Engine):
         try:
             # fast path: space available, no executor hop
             return gw.submit_nowait(wf, optimize=optimize, tenant=tenant,
-                                    priority=priority)
+                                    priority=priority, lint=lint)
         except QueueFull:
             if not block:
                 raise
         return await asyncio.get_running_loop().run_in_executor(
             None, lambda: gw.submit_nowait(wf, optimize=optimize,
                                            tenant=tenant, priority=priority,
-                                           block=True))
+                                           block=True, lint=lint))
 
     def resume(self, run: WorkflowRun, tenant: str = "default",
                **kw) -> WorkflowRun:

@@ -36,10 +36,17 @@ ordered sequence of ``WorkflowEvent``s:
     ``{"Succeeded", "Failed", "Cancelled"}``. A cancelled run keeps its
     unlaunched steps ``Pending`` and is resumable via ``engine.resume``.
 
-Invariants (pinned by ``tests/test_gateway.py``, ``tests/test_streaming.py``
-and the event-ordering fuzz in ``scripts/sanity.py``):
+Invariants — the **executable specification** is
+``repro.core.analysis.TraceChecker``, a linear-time automaton that
+consumes each run's event stream and raises ``TraceViolation`` naming the
+broken invariant. The gateway/streaming test suites and the sanity fuzz
+all validate streams through that single checker, and
+``WorkflowGateway(check_events=True)`` (or
+``LocalEngine(check_events=True)``) attaches one per run inline —
+sanitizer mode — so a breach raises at the offending publish. In prose:
 
-1. ``WORKFLOW_ADMITTED`` precedes every ``STEP_*`` event.
+1. ``WORKFLOW_ADMITTED`` is first (seq 0) and precedes every ``STEP_*``
+   event.
 2. Exactly one terminal event per run, and nothing follows it.
 3. Every ``STEP_SUCCEEDED/CACHED/SKIPPED/FAILED`` is preceded by its own
    ``STEP_STARTED``.
@@ -53,11 +60,17 @@ and the event-ordering fuzz in ``scripts/sanity.py``):
    event (that is the point of streaming) but never the producer's
    ``STEP_STREAMING``.
 
-Exception: a step interrupted *mid-stream* by cooperative cancellation is
-reverted to ``Pending`` (the run stays resumable) and — like a step that
-never launched — gets no terminal step event; its ``STEP_STARTED`` /
-``STEP_STREAMING`` / ``STEP_CHUNK`` events remain in the history, so
-invariant 3 is scoped to runs that were not cancelled.
+Exception (encoded in the checker's cancel scoping): a step interrupted
+*mid-stream* by cooperative cancellation is reverted to ``Pending`` (the
+run stays resumable) and — like a step that never launched — gets no
+terminal step event; its ``STEP_STARTED`` / ``STEP_STREAMING`` /
+``STEP_CHUNK`` events remain in the history, so invariant 3's
+completeness half applies only to runs that ended ``Succeeded``.
+
+Workflows are also statically linted before admission
+(``repro.core.analysis.lint``; diagnostics table in
+``docs/diagnostics.md``) — errors reject at ``submit``/``submit_async``
+time unless ``lint="warn"|"off"``.
 
 The generic ``Engine.submit_async`` fallback (engines without a native
 async path, e.g. ``MultiClusterEngine`` or the YAML generators) emits only

@@ -78,8 +78,12 @@ class WorkflowGateway:
                  max_inflight_steps: Optional[int] = None,
                  max_inflight_workflows: Optional[int] = None,
                  admission: Optional[AdmissionQueue] = None,
-                 promote_interval_s: float = 0.25):
+                 promote_interval_s: float = 0.25,
+                 check_events: bool = False):
         self.engine = engine
+        # sanitizer mode: attach a TraceChecker to every run's publish
+        # path so an invariant breach raises at the offending event
+        self.check_events = check_events
         self.max_workers = max_workers or getattr(engine, "max_workers", 8)
         self.max_inflight_steps = (max_inflight_steps
                                    if max_inflight_steps
@@ -186,19 +190,30 @@ class WorkflowGateway:
                       tenant: str = "default", priority: int = 0,
                       run: Optional[WorkflowRun] = None,
                       resume: bool = False,
-                      block: bool = False) -> AsyncWorkflowRun:
-        """Validate + enqueue one workflow; returns its handle immediately.
-        Raises ``QueueFull`` when the tenant's queue is at capacity (pass
+                      block: bool = False,
+                      lint: str = "error") -> AsyncWorkflowRun:
+        """Lint + validate + enqueue one workflow; returns its handle
+        immediately. Lint errors (``repro.core.analysis``) raise
+        ``WorkflowLintError`` unless ``lint="warn"|"off"``; resumed runs
+        were gated on first submission and are not re-linted. Raises
+        ``QueueFull`` when the tenant's queue is at capacity (pass
         ``block=True`` to wait for space instead — the sync facade does)."""
         if self._closed:
             raise RuntimeError("gateway is closed")
         self.ensure_started()
         if run is None:
+            if lint != "off":
+                from repro.core.analysis import lint_gate
+                lint_gate(wf, mode=lint,
+                          max_inflight_steps=self.max_inflight_steps)
             wf.validate()
             run = WorkflowRun(workflow=wf)
             for n in wf.jobs:
                 run.steps[n] = StepRecord()
         handle = AsyncWorkflowRun(wf.name, run=run, tenant=tenant)
+        if self.check_events:
+            from repro.core.analysis import TraceChecker
+            handle._observer = TraceChecker(wf=wf).observe
         item = AdmittedItem(wf=wf, tenant=tenant, priority=priority,
                             optimize=optimize, resume=resume, handle=handle)
         self.admission.offer(item, block=block)

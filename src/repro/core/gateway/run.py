@@ -48,6 +48,9 @@ class AsyncWorkflowRun:
         self._cancel = threading.Event()
         self._cancel_cbs: List[Callable[[], None]] = []
         self._seq = itertools.count()
+        # sanitizer hook (gateway check_events=True): called under the
+        # publish lock so the checker sees events in seq order
+        self._observer: Optional[Callable[[WorkflowEvent], object]] = None
 
     # -- awaiting ----------------------------------------------------------
     def __await__(self):
@@ -156,6 +159,10 @@ class AsyncWorkflowRun:
                     dead.append(sub)
             for sub in dead:
                 self._subs.remove(sub)
+            if self._observer is not None:
+                # raises TraceViolation at the offending publish; the
+                # lock is released by the with-statement on the way out
+                self._observer(ev)
         return ev
 
     def _finish(self, run: WorkflowRun) -> None:

@@ -120,6 +120,12 @@ class WorkflowIR:
         # incrementally maintained adjacency indices
         self._preds: Dict[str, Set[str]] = {}
         self._succs: Dict[str, Set[str]] = {}
+        # cheap acyclicity witness: job -> insertion index, and whether any
+        # edge ever pointed from a later-inserted job to an earlier one.
+        # All edges forward w.r.t. insertion order => acyclic, so the lint
+        # cycle pass can skip its Kahn sweep for API-built workflows.
+        self._insert_idx: Dict[str, int] = {}
+        self._has_back_edge = False
         # lazily computed derived structure, dropped on mutation
         self._topo_cache: Optional[List[str]] = None
         self._index_cache: Optional[Dict[str, int]] = None
@@ -154,14 +160,34 @@ class WorkflowIR:
         self._adj_cache = None
 
     # -- construction ------------------------------------------------------
-    def add_job(self, job: Job) -> Job:
+    def add_job(self, job: Job, _check_conditions: bool = True) -> Job:
         if job.name in self.jobs:
             return self.jobs[job.name]          # idempotent (paper's dag())
+        if _check_conditions:
+            self.check_condition_producers(job)
         self.jobs[job.name] = job
+        self._insert_idx[job.name] = len(self.jobs)
         self._preds[job.name] = set()
         self._succs[job.name] = set()
         self._invalidate()
         return job
+
+    def check_condition_producers(self, job: Job) -> None:
+        """Eagerly reject a condition on an artifact nothing produces
+        (diagnostic CLR003): the predicate could only ever evaluate over
+        ``None``, so the mistake surfaced mid-run at the earliest. A job
+        may condition on its own output (``exec_while`` loops do)."""
+        for label, cond in (("condition", job.condition),
+                            ("loop condition", job.loop_condition)):
+            if cond is None:
+                continue
+            producer = cond.artifact.split(":")[0]
+            if producer != job.name and producer not in self.jobs:
+                raise ValueError(
+                    f"workflow {self.name!r}: step {job.name!r} has a "
+                    f"{label} on artifact {cond.artifact!r}, but no step "
+                    f"named {producer!r} produces it (CLR003); add the "
+                    f"producing step first or drop the condition")
 
     def add_edge(self, src: str, dst: str) -> None:
         if src not in self.jobs or dst not in self.jobs:
@@ -171,6 +197,8 @@ class WorkflowIR:
         if (src, dst) in self.edges:
             return                              # idempotent, keep caches
         self.edges.add((src, dst))
+        if self._insert_idx[src] > self._insert_idx[dst]:
+            self._has_back_edge = True
         self._succs[src].add(dst)
         self._preds[dst].add(src)
         self._invalidate()
@@ -286,7 +314,9 @@ class WorkflowIR:
         sub = WorkflowIR(name, dict(self.configs))
         keep = set(names)
         for n in names:
-            sub.add_job(self.jobs[n])           # shares Job objects
+            # shares Job objects; a condition's producer may land in a
+            # sibling part, so the eager CLR003 check is skipped here
+            sub.add_job(self.jobs[n], _check_conditions=False)
         for n in names:
             for d in self._succs.get(n, ()):
                 if d in keep:

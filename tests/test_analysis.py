@@ -1,0 +1,449 @@
+"""Static analyzer (repro.core.analysis) tests: property-based no-false-
+positive checks over random valid DAGs, mutation operators that must each
+trip the right CLR diagnostic, the submission-time lint gate, and the
+TraceChecker executable event spec (one violation case per invariant)."""
+import random
+import time
+
+import pytest
+
+from repro.core import couler
+from repro.core.analysis import (CODES, Severity, TraceChecker,
+                                 TraceViolation, WorkflowLintError, lint,
+                                 lint_gate, nondeterminism_findings)
+from repro.core.engines.cluster import Cluster, MultiClusterEngine
+from repro.core.engines.local import LocalEngine
+from repro.core.gateway.events import EventType, WorkflowEvent
+from repro.core.ir import Condition, Job, Resources, WorkflowIR
+
+
+def _ok_fn(*args):
+    return 0
+
+
+def _noisy_fn():
+    return random.random()
+
+
+def _seeded_fn():
+    rng = random.Random(0)
+    return rng.normalvariate(0, 1)
+
+
+def _clocky_fn():
+    return time.time()
+
+
+# ---------------------------------------------------------------------------
+# property: valid random DAGs produce zero errors
+# ---------------------------------------------------------------------------
+
+def _random_dag(rng: random.Random, i: int) -> WorkflowIR:
+    wf = WorkflowIR(f"rand-{i}")
+    n = rng.randint(1, 10)
+    for j in range(n):
+        wf.add_job(Job(name=f"s{j}", fn=_ok_fn, outputs=[f"s{j}:out"]))
+    for j in range(1, n):
+        for k in range(j):
+            if rng.random() < 0.35:
+                wf.add_edge(f"s{k}", f"s{j}")
+                if rng.random() < 0.5:
+                    wf.jobs[f"s{j}"].inputs.append(f"s{k}:out")
+    return wf
+
+
+def test_random_valid_dags_have_zero_errors():
+    rng = random.Random(7)
+    big = [Cluster("big", cpu=1024, mem_bytes=1 << 42, gpu=8)]
+    for i in range(40):
+        wf = _random_dag(rng, i)
+        res = lint(wf, clusters=big, max_inflight_steps=64)
+        assert not res.errors, (wf.name, [str(d) for d in res.errors])
+
+
+def test_api_built_workflow_is_clean():
+    with couler.workflow("clean") as ir:
+        a = couler.run_step(_ok_fn, step_name="a")
+        b = couler.run_step(_ok_fn, a, step_name="b")
+        couler.when(couler.equal(b, 0),
+                    lambda: couler.run_step(_ok_fn, step_name="c"))
+    res = lint(ir)
+    assert res.ok() and not res.diagnostics
+
+
+def test_self_referential_loop_condition_is_legal():
+    # exec_while conditioning on the body's own output (coinflip shape)
+    with couler.workflow("loop") as ir:
+        r = couler.run_step(_ok_fn, step_name="flip")
+        couler.exec_while(couler.equal(r, "tails"), lambda: r)
+    assert lint(ir).ok()
+
+
+# ---------------------------------------------------------------------------
+# mutation operators: each must be caught with the right code
+# ---------------------------------------------------------------------------
+
+def _chain(*names: str) -> WorkflowIR:
+    wf = WorkflowIR("chain")
+    for n in names:
+        wf.add_job(Job(name=n, fn=_ok_fn, outputs=[f"{n}:out"]))
+    for a, b in zip(names, names[1:]):
+        wf.add_edge(a, b)
+    return wf
+
+
+def test_mutation_back_edge_is_clr001():
+    wf = _chain("a", "b", "c")
+    wf.add_edge("c", "a")
+    res = lint(wf)
+    assert "CLR001" in res.codes() and not res.ok()
+    [d] = res.errors
+    assert "->" in d.message            # offending path is named
+
+
+def test_mutation_dropped_producer_is_clr003_and_clr008():
+    wf = _chain("p", "c")
+    wf.jobs["c"].inputs.append("p:out")
+    wf.jobs["c"].condition = Condition("equal", "p:out", 1)
+    assert lint(wf).ok()
+    sub = wf.subgraph(["c"], name="mutant")   # producer dropped
+    res = lint(sub)
+    assert {"CLR003", "CLR008"} <= res.codes()
+    assert all(d.severity is Severity.ERROR
+               for d in res.diagnostics if d.code in ("CLR003", "CLR008"))
+
+
+def test_mutation_unseeded_rng_is_clr007_warning():
+    wf = _chain("a", "noisy")
+    wf.jobs["noisy"].fn = _noisy_fn
+    res = lint(wf)
+    assert "CLR007" in res.codes()
+    assert res.ok()                     # warning, not error
+    [d] = res.warnings
+    assert "random.random" in d.message
+    # cacheable=False opts out: caching is the only hazard
+    wf.jobs["noisy"].cacheable = False
+    assert "CLR007" not in lint(wf).codes()
+
+
+def test_mutation_over_requested_resources_is_clr005():
+    wf = _chain("a", "big")
+    wf.jobs["big"].resources = Resources(cpu=512, gpu=16)
+    assert lint(wf).ok()                # no capacity context, no verdict
+    res = lint(wf, clusters=[Cluster("small", cpu=64,
+                                     mem_bytes=1 << 40, gpu=8)])
+    assert "CLR005" in res.codes() and not res.ok()
+    # a cluster that fits it silences the diagnostic
+    res = lint(wf, clusters=[Cluster("huge", cpu=1024,
+                                     mem_bytes=1 << 40, gpu=32)])
+    assert res.ok()
+
+
+def test_orphan_step_is_clr002_warning():
+    wf = _chain("a", "b")
+    wf.add_job(Job(name="island", fn=_ok_fn))
+    res = lint(wf)
+    assert "CLR002" in res.codes() and res.ok()
+
+
+def test_nondeterminism_findings_direct():
+    assert any("random.random" in f for f in nondeterminism_findings(_noisy_fn))
+    assert any("time.time" in f for f in nondeterminism_findings(_clocky_fn))
+    assert nondeterminism_findings(_seeded_fn) == ()
+    assert nondeterminism_findings(len) == ()   # no source: conservative
+
+
+# ---------------------------------------------------------------------------
+# streaming shape diagnostics
+# ---------------------------------------------------------------------------
+
+def _fanin_workflow() -> WorkflowIR:
+    with couler.workflow("fanin") as ir:
+        s1 = couler.run_stream(lambda: iter(range(3)), step_name="p1",
+                               cacheable=False)
+        s2 = couler.run_stream(lambda: iter(range(3)), step_name="p2",
+                               cacheable=False)
+        couler.map_stream(lambda c, other: c + len(other), s1, s2,
+                          step_name="join", cacheable=False)
+    return ir
+
+
+def test_chunkwise_fanin_is_clr004():
+    res = lint(_fanin_workflow())
+    assert "CLR004" in res.codes() and not res.ok()
+    [d] = res.errors
+    assert "p2:out" in d.message        # the materialized extra input
+
+
+def test_fanin_rejected_at_submit_unless_opted_out():
+    eng = LocalEngine(max_workers=4, enable_speculation=False,
+                      promote_interval_s=0.0)
+    try:
+        with pytest.raises(WorkflowLintError) as ei:
+            eng.submit(_fanin_workflow())
+        assert "CLR004" in ei.value.result.codes()
+        run = eng.submit(_fanin_workflow(), lint="off")
+        assert run.status == "Succeeded", run.status
+    finally:
+        eng.close()
+
+
+def test_streaming_depth_over_inflight_bound_is_clr006():
+    with couler.workflow("deep") as ir:
+        cur = couler.run_stream(lambda: iter(range(3)), step_name="p",
+                                cacheable=False)
+        for k in range(3):
+            cur = couler.map_stream(lambda c: c, cur, step_name=f"m{k}",
+                                    cacheable=False)
+    assert lint(ir, max_inflight_steps=8).ok()
+    res = lint(ir, max_inflight_steps=2)
+    assert "CLR006" in res.codes() and not res.ok()
+    eng = LocalEngine(max_workers=4, max_inflight_steps=2,
+                      enable_speculation=False, promote_interval_s=0.0)
+    try:
+        with pytest.raises(WorkflowLintError) as ei:
+            eng.submit(ir)
+        assert "CLR006" in ei.value.result.codes()
+    finally:
+        eng.close()
+
+
+def test_map_stream_over_materialized_source_is_clr009_info():
+    wf = WorkflowIR("mat")
+    wf.add_job(Job(name="p", fn=_ok_fn, outputs=["p:out"]))
+    wf.add_job(Job(name="m", fn=_ok_fn, inputs=["p:out"], stream_input=True,
+                   stream_arg="p:out"))
+    wf.add_edge("p", "m")
+    res = lint(wf)
+    assert "CLR009" in res.codes() and res.ok()
+
+
+# ---------------------------------------------------------------------------
+# eager condition validation at construction time (satellite b)
+# ---------------------------------------------------------------------------
+
+def test_when_with_missing_producer_raises_eagerly():
+    with couler.workflow("eager"):
+        ghost = couler.StepOutput("ghost", "ghost:out")
+        with pytest.raises(ValueError, match="CLR003"):
+            couler.when(couler.equal(ghost, True),
+                        lambda: couler.run_step(_ok_fn, step_name="then"))
+
+
+def test_when_on_none_raises_eagerly():
+    # the NL2WF failure shape: conditioning on a plain value (e.g. an
+    # unassigned template variable) instead of a StepOutput
+    with couler.workflow("eager-none"):
+        with pytest.raises(ValueError, match="CLR003"):
+            couler.when(couler.equal(None, True),
+                        lambda: couler.run_step(_ok_fn, step_name="deploy"))
+
+
+def test_exec_while_with_missing_producer_raises_eagerly():
+    with couler.workflow("eager-loop"):
+        ghost = couler.StepOutput("ghost", "ghost:out")
+        with pytest.raises(ValueError, match="CLR003"):
+            couler.exec_while(couler.equal(ghost, 1),
+                              lambda: couler.run_step(_ok_fn,
+                                                      step_name="body"))
+
+
+def test_add_job_validates_condition_producer():
+    wf = WorkflowIR("direct")
+    bad = Job(name="c", fn=_ok_fn,
+              condition=Condition("equal", "missing:out", 1))
+    with pytest.raises(ValueError, match="CLR003"):
+        wf.add_job(bad)
+
+
+# ---------------------------------------------------------------------------
+# lint gate modes + engine wiring
+# ---------------------------------------------------------------------------
+
+def test_lint_gate_modes():
+    cyc = _chain("a", "b")
+    cyc.add_edge("b", "a")
+    with pytest.raises(WorkflowLintError) as ei:
+        lint_gate(cyc)
+    assert ei.value.result.errors and "lint=" in str(ei.value)
+    assert lint_gate(cyc, mode="warn") is not None    # no raise
+    assert lint_gate(cyc, mode="off") is None
+    with pytest.raises(ValueError):
+        lint_gate(cyc, mode="loud")
+
+
+def test_lint_gate_records_warnings_in_workflow_configs():
+    wf = _chain("a", "noisy")
+    wf.jobs["noisy"].fn = _noisy_fn
+    res = lint_gate(wf)                 # warnings never raise
+    assert res is not None and res.ok()
+    recorded = wf.configs["lint_warnings"]
+    assert any(d["code"] == "CLR007" for d in recorded)
+
+
+def test_engine_submit_records_warnings():
+    wf = _chain("a", "noisy")
+    wf.jobs["noisy"].fn = _noisy_fn
+    eng = LocalEngine(max_workers=2, enable_speculation=False,
+                      promote_interval_s=0.0)
+    try:
+        run = eng.submit(wf)
+        assert run.status == "Succeeded"
+        assert any(d["code"] == "CLR007"
+                   for d in wf.configs["lint_warnings"])
+    finally:
+        eng.close()
+
+
+def test_cluster_engine_rejects_unschedulable_workflow():
+    wf = _chain("a", "big")
+    wf.jobs["big"].resources = Resources(cpu=1 << 20)
+    eng = MultiClusterEngine()
+    with pytest.raises(WorkflowLintError) as ei:
+        eng.submit_many([(wf, "alice", 1)])
+    assert "CLR005" in ei.value.result.codes()
+
+
+def test_couler_lint_api():
+    with couler.workflow("api") as ir:
+        couler.run_step(_ok_fn, step_name="only")
+        res = couler.lint()
+    assert res.ok() and res.workflow == "api"
+    assert couler.lint(ir).ok()
+
+
+def test_repo_corpus_has_no_lint_errors():
+    """Zero false positives across the whole workflow corpus (example
+    DAG shapes, benchmark workloads, SQLFlow translations, NL2WF
+    generations) — the same gate scripts/lint_workflows.py runs in CI."""
+    import importlib.util
+    from pathlib import Path
+    path = (Path(__file__).resolve().parent.parent / "scripts"
+            / "lint_workflows.py")
+    spec = importlib.util.spec_from_file_location("lint_workflows", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    n_wf, n_err, _n_warn = mod.run_gate(verbose=False)
+    assert n_wf >= 10 and n_err == 0, (n_wf, n_err)
+
+
+def test_codes_table_is_consistent():
+    assert set(CODES) == {f"CLR00{i}" for i in range(1, 10)}
+    for code, (sev, _meaning) in CODES.items():
+        assert isinstance(sev, Severity)
+
+
+# ---------------------------------------------------------------------------
+# TraceChecker: the executable event spec, one violation per invariant
+# ---------------------------------------------------------------------------
+
+def _ev(t: EventType, step: str = "", status: str = "", chunk: int = -1,
+        seq: int = -1) -> WorkflowEvent:
+    return WorkflowEvent(type=t, workflow="w", run_id="r", step=step,
+                         status=status, chunk=chunk, seq=seq)
+
+
+_ADM = _ev(EventType.WORKFLOW_ADMITTED)
+_DONE_OK = _ev(EventType.WORKFLOW_DONE, status="Succeeded")
+
+
+def _stream_wf() -> WorkflowIR:
+    wf = WorkflowIR("sw")
+    wf.add_job(Job(name="p", fn=_ok_fn, outputs=["p:out"],
+                   stream_output=True, cacheable=False))
+    wf.add_job(Job(name="m", fn=_ok_fn, inputs=["p:out"], stream_input=True,
+                   stream_arg="p:out", cacheable=False))
+    wf.add_edge("p", "m")
+    return wf
+
+
+def test_trace_valid_stream_passes():
+    evs = [_ADM,
+           _ev(EventType.STEP_STARTED, "p"),
+           _ev(EventType.STEP_STREAMING, "p"),
+           _ev(EventType.STEP_CHUNK, "p", chunk=0),
+           _ev(EventType.STEP_STARTED, "m"),
+           _ev(EventType.STEP_CHUNK, "p", chunk=1),
+           _ev(EventType.STEP_SUCCEEDED, "p"),
+           _ev(EventType.STEP_SUCCEEDED, "m"),
+           _DONE_OK]
+    chk = TraceChecker.check(evs, wf=_stream_wf())
+    assert chk.chunks["p"] == 1 and chk.n_events == len(evs)
+
+
+def _expect(evs, invariant, wf=None):
+    with pytest.raises(TraceViolation) as ei:
+        TraceChecker.check(evs, wf=wf)
+    assert ei.value.invariant == invariant, str(ei.value)
+
+
+def test_trace_inv1_admitted_first():
+    _expect([_ev(EventType.STEP_STARTED, "a"), _ADM, _DONE_OK], 1)
+
+
+def test_trace_inv2_nothing_after_terminal():
+    _expect([_ADM, _DONE_OK, _ev(EventType.STEP_STARTED, "a")], 2)
+
+
+def test_trace_inv2_bad_terminal_status():
+    _expect([_ADM, _ev(EventType.WORKFLOW_DONE, status="Exploded")], 2)
+
+
+def test_trace_inv2_missing_terminal():
+    _expect([_ADM, _ev(EventType.STEP_STARTED, "a"),
+             _ev(EventType.STEP_SUCCEEDED, "a")], 2)
+
+
+def test_trace_inv3_succeeded_run_must_complete_steps():
+    evs = [_ADM, _ev(EventType.STEP_STARTED, "a"), _DONE_OK]
+    _expect(evs, 3)
+    # cancel scoping: a Cancelled run may leave started steps dangling
+    evs = [_ADM, _ev(EventType.STEP_STARTED, "a"),
+           _ev(EventType.WORKFLOW_DONE, status="Cancelled")]
+    TraceChecker.check(evs)
+
+
+def test_trace_inv3_terminal_before_start_and_duplicates():
+    _expect([_ADM, _ev(EventType.STEP_SUCCEEDED, "a"), _DONE_OK], 3)
+    _expect([_ADM, _ev(EventType.STEP_STARTED, "a"),
+             _ev(EventType.STEP_STARTED, "a")], 3)
+
+
+def test_trace_inv4_chunk_needs_streaming_announcement():
+    _expect([_ADM, _ev(EventType.STEP_STARTED, "p"),
+             _ev(EventType.STEP_CHUNK, "p", chunk=0)], 4)
+    _expect([_ADM, _ev(EventType.STEP_STREAMING, "p")], 4)
+
+
+def test_trace_inv5_chunk_indices_monotone_or_rewind():
+    _expect([_ADM, _ev(EventType.STEP_STARTED, "p"),
+             _ev(EventType.STEP_STREAMING, "p"),
+             _ev(EventType.STEP_CHUNK, "p", chunk=0),
+             _ev(EventType.STEP_CHUNK, "p", chunk=2)], 5)
+    # a rewind restart at 0 is legal (retry re-announces first)
+    evs = [_ADM, _ev(EventType.STEP_STARTED, "p"),
+           _ev(EventType.STEP_STREAMING, "p"),
+           _ev(EventType.STEP_CHUNK, "p", chunk=0),
+           _ev(EventType.STEP_CHUNK, "p", chunk=1),
+           _ev(EventType.STEP_STREAMING, "p"),
+           _ev(EventType.STEP_CHUNK, "p", chunk=0),
+           _ev(EventType.STEP_CHUNK, "p", chunk=1),
+           _ev(EventType.STEP_CHUNK, "p", chunk=2),
+           _ev(EventType.STEP_SUCCEEDED, "p"),
+           _ev(EventType.WORKFLOW_DONE, status="Succeeded")]
+    assert TraceChecker.check(evs).chunks["p"] == 2
+
+
+def test_trace_inv6_consumer_waits_for_streaming():
+    evs = [_ADM, _ev(EventType.STEP_STARTED, "p"),
+           _ev(EventType.STEP_STARTED, "m")]
+    _expect(evs, 6, wf=_stream_wf())
+    # without topology the checker cannot (and must not) guess
+    TraceChecker.check(evs + [_ev(EventType.WORKFLOW_DONE,
+                                  status="Cancelled")])
+
+
+def test_trace_seq_contiguity():
+    _expect([_ev(EventType.WORKFLOW_ADMITTED, seq=1)], 1)
+    _expect([_ev(EventType.WORKFLOW_ADMITTED, seq=0),
+             _ev(EventType.WORKFLOW_DONE, status="Succeeded", seq=2)], 2)

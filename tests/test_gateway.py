@@ -14,6 +14,7 @@ import time
 import pytest
 
 from repro.core import couler
+from repro.core.analysis import TraceChecker
 from repro.core.cache import (CacheTier, CoulerPolicy, TieredCacheStore,
                               mem_spec, remote_spec, ssd_spec)
 from repro.core.engines.base import StepStatus, WorkflowRun
@@ -47,6 +48,9 @@ def chain_wf(name, k=3, fns=None, sleep=0.0):
 def _engine(**kw):
     kw.setdefault("enable_speculation", False)
     kw.setdefault("promote_interval_s", 0.0)
+    # sanitizer mode: every published event is validated inline by the
+    # TraceChecker, so the whole suite doubles as an invariant check
+    kw.setdefault("check_events", True)
     return LocalEngine(**kw)
 
 
@@ -74,21 +78,9 @@ def test_await_returns_same_run_as_sync_submit():
     eng.close()
 
 
-def _check_stream_invariants(evs):
-    assert evs, "empty event stream"
-    assert evs[0].type is EventType.WORKFLOW_ADMITTED
-    assert evs[0].seq == 0
-    assert evs[-1].terminal
-    assert sum(1 for e in evs if e.terminal) == 1
-    assert all(e.is_step_event for e in evs[1:-1])
-    started = set()
-    for e in evs[1:-1]:
-        if e.type is EventType.STEP_STARTED:
-            started.add(e.step)
-        else:
-            assert e.step in started, f"{e.type} before STEP_STARTED"
-    seqs = [e.seq for e in evs]
-    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+def _check_stream_invariants(evs, wf=None):
+    # single executable spec of the gateway invariants (no local copy)
+    TraceChecker.check(evs, wf=wf)
 
 
 def test_event_stream_ordering_success_and_failure():

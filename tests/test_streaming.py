@@ -18,6 +18,8 @@ from repro.core.gateway.events import EventType
 def _engine(**kw):
     kw.setdefault("enable_speculation", False)
     kw.setdefault("promote_interval_s", 0.0)
+    # sanitizer mode: the TraceChecker validates every event inline
+    kw.setdefault("check_events", True)
     return LocalEngine(**kw)
 
 
@@ -79,9 +81,12 @@ def test_non_streaming_consumer_sees_materialized_whole():
 
 
 def test_streaming_event_invariants_and_overlap():
-    """Consumers start before the producer's terminal event; chunk events
-    sit strictly between their step's STARTED and terminal, indices 0..n-1
-    with STEP_STREAMING before the first chunk."""
+    """Structural event-ordering invariants are delegated to the shared
+    ``TraceChecker`` (the executable spec); this test keeps only the
+    stream-specific expectations — complete chunk coverage per stage and
+    actual producer/consumer overlap."""
+    from repro.core.analysis import TraceChecker
+
     ir, expected = _pipeline("events", n_chunks=8, stages=2, sleep=0.005)
 
     async def main():
@@ -95,15 +100,11 @@ def test_streaming_event_invariants_and_overlap():
 
     evs, run = asyncio.run(main())
     assert run.artifacts["m2:out"] == expected
-    seqs = [e.seq for e in evs]
-    assert seqs == sorted(seqs) == list(range(len(evs)))
+    checker = TraceChecker.check(evs, wf=ir)
     for step in ("p", "m1", "m2"):
-        mine = [e for e in evs if e.step == step]
-        assert mine[0].type is EventType.STEP_STARTED
-        assert mine[-1].type is EventType.STEP_SUCCEEDED
-        inner = mine[1:-1]
-        assert inner[0].type is EventType.STEP_STREAMING
-        idx = [e.chunk for e in inner if e.type is EventType.STEP_CHUNK]
+        assert checker.chunks[step] == 7      # all 8 chunks, last index 7
+        idx = [e.chunk for e in evs if e.step == step
+               and e.type is EventType.STEP_CHUNK]
         assert idx == list(range(8))
     by_seq = {e.step: {"started": None, "terminal": None} for e in evs
               if e.step}
