@@ -1,0 +1,152 @@
+"""Fault-tolerance benchmark: completion rate and makespan under chaos,
+recovery machinery on vs off.
+
+Two measured axes, same seeded ``FaultPlan`` everywhere:
+
+* ``local`` — a batch of DAG workflows through ``LocalEngine`` with
+  transient/permanent crashes and worker loss injected.
+  ``recovery_off`` strips the safety nets (no retries survive the
+  permanent crashes, no re-admission); ``recovery_on`` enables capped
+  jittered retry backoff, frontier recording, and straggler-aware
+  re-admission. The claim: recovery-on completes strictly more workflows.
+* ``cluster`` — the ``MultiClusterEngine`` simulator under Poisson
+  cluster preemption; recovery is structural there (evicted jobs re-enter
+  placement), so the row reports the makespan inflation chaos costs
+  relative to a preemption-free schedule.
+"""
+import asyncio
+import random
+import time
+from typing import Any, Dict, List
+
+from repro.core.analysis import TraceChecker
+from repro.core.engines.cluster import Cluster, MultiClusterEngine
+from repro.core.engines.local import LocalEngine
+from repro.core.faults import FaultPlan, ReadmissionPolicy
+from repro.core.ir import Job, Resources, WorkflowIR
+
+
+def _dag_batch(n_workflows: int, seed: int = 0) -> List[WorkflowIR]:
+    rng = random.Random(seed)
+    wfs = []
+    for i in range(n_workflows):
+        wf = WorkflowIR(f"bench-{i}")
+        n = rng.randint(3, 6)
+        for j in range(n):
+            wf.add_job(Job(name=f"s{j}", fn=lambda i=i, j=j: i * 31 + j,
+                           cacheable=False, outputs=[f"s{j}:out"],
+                           retry_limit=3))
+        for j in range(1, n):
+            for k in range(j):
+                if rng.random() < 0.4:
+                    wf.add_edge(f"s{k}", f"s{j}")
+        wfs.append(wf)
+    return wfs
+
+
+def _drive(eng: LocalEngine, wfs: List[WorkflowIR],
+           timeout_s: float) -> List[Any]:
+    async def one(wf):
+        h = await eng.submit_async(wf, block=True)
+        evs = [ev async for ev in h.events()]
+        run = await h
+        if run.status == "Succeeded":
+            TraceChecker.check(evs, wf=wf)
+        return run
+
+    async def _all():
+        return await asyncio.wait_for(
+            asyncio.gather(*[one(w) for w in wfs], return_exceptions=True),
+            timeout=timeout_s)
+
+    return asyncio.run(_all())
+
+
+def _local_row(config: str, n_workflows: int, plan: FaultPlan,
+               timeout_s: float, **eng_kw) -> Dict[str, Any]:
+    eng = LocalEngine(max_workers=6, enable_speculation=False,
+                      promote_interval_s=0.0, check_events=True,
+                      fault_plan=plan, **eng_kw)
+    wfs = _dag_batch(n_workflows)
+    t0 = time.time()
+    results = _drive(eng, wfs, timeout_s)
+    wall = time.time() - t0
+    done = sum(1 for r in results
+               if not isinstance(r, BaseException)
+               and r.status == "Succeeded")
+    inj = dict(eng.injector.stats) if eng.injector else {}
+    readmitted = eng.gateway.stats.get("readmitted", 0)
+    eng.close()
+    return {
+        "kind": "local", "config": config, "n_workflows": n_workflows,
+        "completed": done,
+        "completion_rate": round(done / n_workflows, 4),
+        "makespan_s": round(wall, 4),
+        "injected_faults": (inj.get("crash", 0)
+                           + inj.get("crash_permanent", 0)
+                           + inj.get("worker_lost", 0)),
+        "readmissions": readmitted,
+    }
+
+
+def _cluster_row(n_workflows: int, plan) -> Dict[str, Any]:
+    clusters = lambda: [Cluster("a", cpu=16, mem_bytes=1 << 40),  # noqa: E731
+                        Cluster("b", cpu=16, mem_bytes=1 << 40)]
+    rng = random.Random(1)
+    def batch():
+        wfs = []
+        for i in range(n_workflows):
+            wf = WorkflowIR(f"mc-{i}")
+            prev = None
+            for j in range(rng.randint(2, 4)):
+                wf.add_job(Job(name=f"j{j}", est_time_s=1.0,
+                               resources=Resources(cpu=4)))
+                if prev:
+                    wf.add_edge(prev, f"j{j}")
+                prev = f"j{j}"
+            wfs.append(wf)
+        return [(w, "u0", 0) for w in wfs]
+    eng = MultiClusterEngine(clusters=clusters(), fault_plan=plan)
+    runs = eng.submit_many(batch())
+    base = MultiClusterEngine(clusters=clusters())
+    base.submit_many(batch())
+    done = sum(1 for r in runs.values() if r.succeeded())
+    return {
+        "kind": "cluster",
+        "config": "preemption" if plan else "fault_free",
+        "n_workflows": n_workflows, "completed": done,
+        "completion_rate": round(done / n_workflows, 4),
+        "makespan_s": round(eng.metrics["makespan_s"], 4),
+        "fault_free_makespan_s": round(base.metrics["makespan_s"], 4),
+        "preemptions": eng.metrics["preemptions"],
+        "preempted_jobs": eng.metrics["preempted_jobs"],
+    }
+
+
+def run(n_workflows: int = 24, timeout_s: float = 240.0) -> List[Dict]:
+    plan = FaultPlan(seed=9, crash_rate=0.25, permanent_rate=0.1,
+                     worker_loss_rate=0.1, max_failures_per_site=4)
+    rows = [
+        # recovery off: single attempt per step (retry budget zeroed via
+        # an immediately-exhausted policy), no re-admission
+        _local_row("recovery_off", n_workflows, plan, timeout_s,
+                   retry_backoff_s=0.0, retry_backoff_max_s=0.0,
+                   readmission=None),
+        _local_row("recovery_on", n_workflows, plan, timeout_s,
+                   retry_backoff_s=0.002, retry_backoff_max_s=0.02,
+                   frontier=True,
+                   readmission=ReadmissionPolicy(base_backoff_s=0.01,
+                                                 max_backoff_s=0.1)),
+        _cluster_row(n_workflows,
+                     FaultPlan(seed=4, preemption_rate_per_s=0.3,
+                               preemption_dark_s=2.0)),
+    ]
+    on = next(r for r in rows if r["config"] == "recovery_on")
+    off = next(r for r in rows if r["config"] == "recovery_off")
+    on["beats_recovery_off"] = on["completion_rate"] > off["completion_rate"]
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -64,6 +64,17 @@ SUITES = [
          rows[0]["streamed_over_stage"],
          rows[0]["meets_1p5x_bar"] and rows[0]["artifacts_identical"]
          and rows[0]["bounded_inflight_ok"])),
+    ("fault_tolerance", "benchmarks.bench_faults",
+     {"n_workflows": 12, "timeout_s": 120.0},
+     lambda rows: "recovery_on=%s_off=%s_beats=%s_preempt_ok=%s" % (
+         [r["completion_rate"] for r in rows
+          if r["config"] == "recovery_on"][0],
+         [r["completion_rate"] for r in rows
+          if r["config"] == "recovery_off"][0],
+         [r for r in rows if r["config"] == "recovery_on"
+          ][0]["beats_recovery_off"],
+         [r["completion_rate"] for r in rows
+          if r["kind"] == "cluster"][0] == 1.0)),
     ("learning_tableIV", "benchmarks.bench_learning", {},
      lambda rows: "couler_loc=" + str(
          [r for r in rows if r["interface"] == "couler"][0]["loc"])),

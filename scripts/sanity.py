@@ -188,6 +188,110 @@ def streaming_event_sanity() -> bool:
     return True
 
 
+def chaos_sanity() -> bool:
+    """Chaos fuzz: >=32 concurrent workflows through a LocalEngine with
+    seeded fault injection (transient/permanent crashes + worker loss),
+    frontier recording, and straggler-aware re-admission. Every run must
+    reach Succeeded with artifacts bit-identical to a fault-free engine,
+    and every event stream passes the TraceChecker sanitizer inline
+    (check_events=True) plus a post-hoc replay. A second phase batches
+    preemption-struck workflows through the MultiClusterEngine simulator."""
+    import asyncio
+
+    from repro.core.analysis import TraceChecker
+    from repro.core.engines.cluster import Cluster, MultiClusterEngine
+    from repro.core.engines.local import LocalEngine
+    from repro.core.faults import FaultPlan, ReadmissionPolicy
+    from repro.core.ir import Job, Resources, WorkflowIR
+
+    n_wf = 32
+
+    def build_batch():
+        # fresh seeded rng per batch -> the chaos and fault-free batches
+        # are structurally identical (required for the bit-identity check)
+        rng = random.Random(2)
+        wfs = []
+        for i in range(n_wf):
+            wf = WorkflowIR(f"chaos-{i}")
+            n = rng.randint(3, 6)
+            for j in range(n):
+                wf.add_job(Job(name=f"s{j}",
+                               fn=lambda i=i, j=j: (i, j, i * j),
+                               cacheable=False, outputs=[f"s{j}:out"],
+                               retry_limit=3))
+            for j in range(1, n):
+                for k in range(j):
+                    if rng.random() < 0.4:
+                        wf.add_edge(f"s{k}", f"s{j}")
+            wfs.append(wf)
+        return wfs
+
+    batches = [build_batch(), build_batch()]
+    plan = FaultPlan(seed=9, crash_rate=0.25, permanent_rate=0.1,
+                     worker_loss_rate=0.1, max_failures_per_site=4)
+
+    async def drive(eng: LocalEngine, wfs) -> list:
+        async def one(wf):
+            h = await eng.submit_async(wf, tenant=f"t{hash(wf.name) % 3}",
+                                       block=True)
+            evs = [ev async for ev in h.events()]
+            TraceChecker.check(evs, wf=wf)
+            return await h
+        return await asyncio.wait_for(
+            asyncio.gather(*[one(w) for w in wfs]), timeout=240)
+
+    try:
+        chaos_eng = LocalEngine(
+            max_workers=6, enable_speculation=False, promote_interval_s=0.0,
+            check_events=True, fault_plan=plan, frontier=True,
+            retry_backoff_s=0.002, retry_backoff_max_s=0.02,
+            readmission=ReadmissionPolicy(base_backoff_s=0.01,
+                                          max_backoff_s=0.1))
+        clean_eng = LocalEngine(max_workers=6, enable_speculation=False,
+                                promote_interval_s=0.0, check_events=True)
+        chaos_runs = asyncio.run(drive(chaos_eng, batches[0]))
+        clean_runs = asyncio.run(drive(clean_eng, batches[1]))
+        inj = chaos_eng.injector.stats
+        assert inj["crash"] + inj["crash_permanent"] + inj["worker_lost"] > 0
+        for cr, fr in zip(chaos_runs, clean_runs):
+            assert cr.status == "Succeeded", \
+                f"{cr.workflow.name}: {cr.status}"
+            assert cr.artifacts == fr.artifacts, \
+                f"{cr.workflow.name}: artifacts diverged under chaos"
+        chaos_eng.close()
+        clean_eng.close()
+
+        # cluster preemption: every struck batch still completes
+        cplan = FaultPlan(seed=4, preemption_rate_per_s=0.3,
+                          preemption_dark_s=2.0)
+        ceng = MultiClusterEngine(clusters=[
+            Cluster("a", cpu=16, mem_bytes=1 << 40),
+            Cluster("b", cpu=16, mem_bytes=1 << 40)], fault_plan=cplan)
+        wfs = []
+        for i in range(12):
+            wf = WorkflowIR(f"mc-chaos-{i}")
+            prev = None
+            for j in range(3):
+                wf.add_job(Job(name=f"j{j}", est_time_s=1.0,
+                               resources=Resources(cpu=4)))
+                if prev:
+                    wf.add_edge(prev, f"j{j}")
+                prev = f"j{j}"
+            wfs.append(wf)
+        cruns = ceng.submit_many([(w, "u0", 0) for w in wfs])
+        assert all(r.succeeded() for r in cruns.values())
+        assert ceng.metrics["preempted_jobs"] > 0
+    except AssertionError as e:
+        print(f"FAIL chaos {e}")
+        return False
+    readm = chaos_eng.gateway.stats.get("readmitted", 0)
+    print(f"OK   chaos {n_wf} runs bit-identical under "
+          f"{inj['crash']}+{inj['crash_permanent']}+{inj['worker_lost']} "
+          f"injected faults ({readm} readmissions); "
+          f"{ceng.metrics['preempted_jobs']} cluster evictions recovered")
+    return True
+
+
 def workflow_lint_sanity() -> bool:
     """CI lint gate: every example/bench/NL2WF workflow must lint with
     zero errors (scripts/lint_workflows.py has the corpus)."""
@@ -209,6 +313,7 @@ def workflow_lint_sanity() -> bool:
 ok = cache_tier_sanity() and ok
 ok = gateway_event_sanity() and ok
 ok = streaming_event_sanity() and ok
+ok = chaos_sanity() and ok
 ok = workflow_lint_sanity() and ok
 for aid in only:
     spec = get_arch(aid)

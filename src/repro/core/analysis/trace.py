@@ -35,6 +35,18 @@ Invariants (numbers match the gateway package docstring):
    ``STEP_STREAMING``. Needs workflow topology (``wf=``); checked
    leniently for producers with no events in this stream (already
    satisfied before a resume).
+7. ``STEP_RETRY`` / ``WORKER_LOST`` fall strictly between their own
+   step's ``STEP_STARTED`` and terminal event, and a step's
+   ``STEP_RETRY`` attempt numbers strictly increase (within one
+   admission epoch — see 8).
+8. ``WORKFLOW_REQUEUED`` (a failed run re-entering admission after
+   backoff) appears only after ``WORKFLOW_ADMITTED`` and before the
+   terminal event, and opens a new *epoch*: per-step bookkeeping
+   (started / streaming / terminal / chunks / retry attempts) resets, so
+   re-executed steps legitimately re-announce ``STEP_STARTED``.
+   ``CLUSTER_PREEMPTED`` is run-scope (the cluster simulator emits no
+   step lifecycle) and may appear anywhere between admission and the
+   terminal event.
 
 ``TraceViolation`` subclasses ``AssertionError`` so assertion-driven
 harnesses (the sanity fuzzes) treat breaches like any failed check.
@@ -78,6 +90,8 @@ class TraceChecker:
         self.streaming: Set[str] = set()
         self.step_terminal: Set[str] = set()
         self.chunks: Dict[str, int] = {}
+        self.retries: Dict[str, int] = {}   # step -> last STEP_RETRY attempt
+        self.epoch = 0                      # re-admissions observed
         self._last_seq: Optional[int] = None
         self.n_events = 0
 
@@ -118,6 +132,22 @@ class TraceChecker:
                     raise TraceViolation(
                         3, f"run Succeeded but started steps {missing} "
                            f"have no terminal step event", ev)
+        elif t is EventType.WORKFLOW_REQUEUED:
+            if not self.admitted:
+                raise TraceViolation(8, "WORKFLOW_REQUEUED before "
+                                        "WORKFLOW_ADMITTED", ev)
+            # new admission epoch: the gateway reset unsatisfied steps to
+            # Pending, so they may re-announce STEP_STARTED
+            self.epoch += 1
+            self.started.clear()
+            self.streaming.clear()
+            self.step_terminal.clear()
+            self.chunks.clear()
+            self.retries.clear()
+        elif t is EventType.CLUSTER_PREEMPTED:
+            if not self.admitted:
+                raise TraceViolation(8, "CLUSTER_PREEMPTED before "
+                                        "WORKFLOW_ADMITTED", ev)
         elif ev.is_step_event:
             if not self.admitted:
                 raise TraceViolation(1, f"{t.name} before "
@@ -163,6 +193,26 @@ class TraceChecker:
                     5, f"chunk index {ev.chunk} for {s!r} after {prev}: "
                        f"neither +1 nor a rewind restart at 0", ev)
             self.chunks[s] = ev.chunk
+        elif t is EventType.STEP_RETRY:
+            if s not in self.started:
+                raise TraceViolation(7, f"STEP_RETRY for {s!r} before its "
+                                        f"STEP_STARTED", ev)
+            if s in self.step_terminal:
+                raise TraceViolation(7, f"STEP_RETRY for {s!r} after its "
+                                        f"terminal event", ev)
+            prev = self.retries.get(s, 0)
+            if ev.attempt <= prev:
+                raise TraceViolation(
+                    7, f"STEP_RETRY attempt {ev.attempt} for {s!r} not "
+                       f"greater than previous attempt {prev}", ev)
+            self.retries[s] = ev.attempt
+        elif t is EventType.WORKER_LOST:
+            if s not in self.started:
+                raise TraceViolation(7, f"WORKER_LOST for {s!r} before its "
+                                        f"STEP_STARTED", ev)
+            if s in self.step_terminal:
+                raise TraceViolation(7, f"WORKER_LOST for {s!r} after its "
+                                        f"terminal event", ev)
         else:  # terminal step event
             if s not in self.started:
                 raise TraceViolation(3, f"{t.name} for {s!r} before its "

@@ -199,6 +199,32 @@ def run_job(fn: Callable, *args, num_workers: int = 1,
                      kw, kind="job", resources=res, step_name=step_name)
 
 
+def add_job(fn: Callable, *args, num_workers: int = 1,
+            checkpoint: Optional[str] = None,
+            step_name: Optional[str] = None, **kw) -> StepOutput:
+    """Long (training-shaped) job with optional checkpoint-resume.
+
+    With ``checkpoint=dir`` the step is checkpoint-wired: ``fn`` is
+    called with an extra ``ckpt=`` keyword — a
+    ``repro.training.checkpoint.StepCheckpointSession`` whose
+    ``latest_step()`` / ``restore()`` / ``save(step, state)`` persist
+    progress under ``dir`` — so a mid-step worker loss resumes from the
+    latest checkpoint instead of the step's start (the engine retries the
+    step, and the fn finds its own saved progress). Checkpoint-wired
+    steps never speculate (two racers would share one directory).
+    """
+    res = kw.pop("resources", Resources(cpu=float(num_workers)))
+    opts = {k: kw.pop(k) for k in ("cacheable", "est_time_s",
+                                   "est_mem_bytes", "retry_limit")
+            if k in kw}
+    out = _add_step(step_name or getattr(fn, "__name__", "job"), fn, args,
+                    kw, kind="job", resources=res, step_name=step_name,
+                    **opts)
+    if checkpoint:
+        _wf().jobs[out.job_name].checkpoint = str(checkpoint)
+    return out
+
+
 def equal(a, b=None) -> Condition:
     if isinstance(a, StepOutput):
         return Condition("equal", a.artifact, b)

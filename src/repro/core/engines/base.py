@@ -39,6 +39,10 @@ class StepRecord:
     # computed this run (whole-step CACHED means all chunks replayed)
     chunks_replayed: int = 0
     chunks_emitted: int = 0
+    # content key the step's outputs were offered under — persisted so a
+    # restarted engine can reconstruct the completion frontier from cache
+    # hits (repro.core.faults.restore_frontier)
+    cache_key: str = ""
 
     def duration(self) -> float:
         return max(0.0, self.end - self.start)
@@ -78,7 +82,8 @@ class WorkflowRun:
             "status": self.status,
             "wall_time_s": self.wall_time_s,
             "steps": {k: {"status": r.status.value, "attempts": r.attempts,
-                          "duration": r.duration(), "error": r.error}
+                          "duration": r.duration(), "error": r.error,
+                          "cache_key": r.cache_key}
                       for k, r in self.steps.items()},
         }, indent=1))
         return f

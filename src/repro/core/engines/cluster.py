@@ -35,11 +35,14 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.cache.store import TieredCacheStore
 from repro.core.engines.base import Engine, StepRecord, StepStatus, WorkflowRun
+from repro.core.faults.plan import FaultPlan
+from repro.core.gateway.events import EventType
 from repro.core.ir import WorkflowIR
 
 
@@ -52,6 +55,9 @@ class Cluster:
     used_cpu: float = 0.0
     used_mem: float = 0.0
     used_gpu: float = 0.0
+    # simulated preemption (FaultPlan): no placements while the sim clock
+    # is before dark_until
+    dark_until: float = 0.0
 
     def fits(self, job) -> bool:
         r = job.resources
@@ -121,7 +127,8 @@ class MultiClusterEngine(Engine):
                  quotas: Optional[Dict[str, UserQuota]] = None,
                  caches: Optional[Dict[str, "TieredCacheStore"]] = None,
                  xfer_bandwidth_bytes_s: float = 1.2e8,
-                 xfer_latency_s: float = 2e-2):
+                 xfer_latency_s: float = 2e-2,
+                 fault_plan: Optional[FaultPlan] = None):
         self.clusters = clusters or [
             Cluster("gpu-cluster", cpu=512, mem_bytes=2048 * 2**30, gpu=64),
             Cluster("cpu-cluster", cpu=2048, mem_bytes=8192 * 2**30),
@@ -134,10 +141,16 @@ class MultiClusterEngine(Engine):
         self.caches = caches
         self.xfer_bandwidth_bytes_s = xfer_bandwidth_bytes_s
         self.xfer_latency_s = xfer_latency_s
+        # simulated cluster preemption (FaultPlan.preemption_rate_per_s):
+        # per-cluster Poisson process; a struck cluster goes dark for
+        # preemption_dark_s, its in-flight jobs are evicted and re-enter
+        # their ready queues (re-placed elsewhere or parked until recovery)
+        self.fault_plan = fault_plan
         self._seq = itertools.count()
         self.metrics = {"scheduled_jobs": 0, "completed_workflows": 0,
                         "failed_admission": 0, "makespan_s": 0.0,
                         "fetch_wait_s": 0.0, "recompute_wait_s": 0.0,
+                        "preemptions": 0, "preempted_jobs": 0,
                         "cluster_busy_s": {c.name: 0.0 for c in self.clusters}}
 
     def _quota(self, user: str) -> UserQuota:
@@ -146,23 +159,25 @@ class MultiClusterEngine(Engine):
         return self.quotas[user]
 
     def _pick_cluster(self, job, st: Optional["_WfState"] = None,
-                      n: Optional[str] = None) -> Optional[Cluster]:
+                      n: Optional[str] = None,
+                      now: float = 0.0) -> Optional[Cluster]:
         """Weighted choice: prefer fitting cluster with the lowest load;
         GPU jobs must land on a GPU cluster. With per-cluster caches
         attached, artifact locality dominates: the fitting cluster with the
-        cheapest input materialization wins, load breaks ties."""
+        cheapest input materialization wins, load breaks ties. Preempted
+        (dark) clusters are excluded until they recover."""
         pool = self._gpu_clusters if job.resources.gpu > 0 else self.clusters
         if self.caches is None or st is None:
             best, best_load = None, float("inf")
             for c in pool:
-                if c.fits(job):
+                if c.dark_until <= now and c.fits(job):
                     l = c.load()
                     if l < best_load:
                         best, best_load = c, l
             return best
         best, best_key = None, None
         for c in pool:
-            if c.fits(job):
+            if c.dark_until <= now and c.fits(job):
                 key = (round(self._input_cost_s(st, n, c), 9), c.load())
                 if best_key is None or key < best_key:
                     best, best_key = c, key
@@ -245,7 +260,9 @@ class MultiClusterEngine(Engine):
         return {"clusters": self.clusters}
 
     def submit_many(self, workflows: List[Tuple[WorkflowIR, str, int]],
-                    lint: str = "error") -> Dict[str, WorkflowRun]:
+                    lint: str = "error",
+                    handles: Optional[Dict[str, object]] = None
+                    ) -> Dict[str, WorkflowRun]:
         """Simulate scheduling a batch of (workflow, user, priority).
 
         Each workflow is linted against this engine's clusters first: a
@@ -253,7 +270,16 @@ class MultiClusterEngine(Engine):
         instead of pinning it Pending in the queue forever
         (``lint="warn"|"off"`` restores the old behavior). Returns runs
         keyed by workflow name; self.metrics aggregates utilization &
-        makespan."""
+        makespan.
+
+        With a ``fault_plan`` whose ``preemption_rate_per_s > 0``, each
+        cluster is struck by a seeded Poisson preemption process: the
+        cluster goes dark for ``preemption_dark_s`` of simulated time, its
+        in-flight jobs are evicted (freed, attempts bumped, re-readied for
+        placement elsewhere or parked until recovery), and — when
+        ``handles`` maps workflow names to async run handles —
+        ``CLUSTER_PREEMPTED`` events are published per evicted job. With
+        ``fault_plan=None`` scheduling is bit-identical to before."""
         if lint != "off":
             from repro.core.analysis import lint_gate
             for wf, _user, _prio in workflows:
@@ -265,9 +291,31 @@ class MultiClusterEngine(Engine):
                                          wf, user, prio, 0.0))
         runs: Dict[str, WorkflowRun] = {}
         active: List[_WfState] = []
-        # (finish_time, seq, cluster, user, wf_state, job_name)
-        events: List[Tuple[float, int, Cluster, str, _WfState, str]] = []
+        # (finish_time, seq, cluster, user, wf_state, job_name); chaos
+        # markers reuse the tuple shape with wf_state=None and job_name in
+        # {"__preempt__", "__recover__"}
+        events: List[Tuple[float, int, Cluster, str,
+                           Optional[_WfState], str]] = []
         now = 0.0
+        last_t = 0.0
+        # darkness never leaks across batches: the sim clock restarts at 0
+        for c in self.clusters:
+            c.dark_until = 0.0
+        plan = self.fault_plan
+        chaos = plan is not None and plan.preemption_rate_per_s > 0
+        # seq -> (cluster, user, wf_state, job_name) of jobs currently
+        # executing (eviction candidates); evicted completion events stay
+        # in the heap and are lazily discarded via `dead`
+        inflight: Dict[int, Tuple[Cluster, str, _WfState, str]] = {}
+        dead: Set[int] = set()
+        rngs: Dict[str, random.Random] = {}
+        done_local = 0
+        if chaos:
+            for c in self.clusters:
+                rngs[c.name] = random.Random(f"{plan.seed}:{c.name}")
+                t = rngs[c.name].expovariate(plan.preemption_rate_per_s)
+                heapq.heappush(events, (t, next(self._seq), c, "",
+                                        None, "__preempt__"))
         # admission indices of workflows with launchable work, visited in
         # admission order each pass; workflows with nothing ready are
         # never touched
@@ -313,7 +361,7 @@ class MultiClusterEngine(Engine):
                     if not q.fits(job):
                         quota_waiters.setdefault(st.user, []).append((ai, i))
                         continue
-                    c = self._pick_cluster(job, st, n)
+                    c = self._pick_cluster(job, st, n, now=now)
                     if c is None:
                         self.metrics["failed_admission"] += 1
                         cluster_waiters.append((ai, i))
@@ -331,14 +379,72 @@ class MultiClusterEngine(Engine):
                     dur = job.est_time_s
                     if self.caches is not None:
                         dur += self._charge_inputs_s(st, n, c)
-                    heapq.heappush(events, (now + dur,
-                                            next(self._seq), c, st.user,
+                    ev_seq = next(self._seq)
+                    heapq.heappush(events, (now + dur, ev_seq, c, st.user,
                                             st, n))
+                    if chaos:
+                        inflight[ev_seq] = (c, st.user, st, n)
 
         admit_from_queue()
         launch_pass()
         while events:
-            now, _, c, user, st, n = heapq.heappop(events)
+            now, seq, c, user, st, n = heapq.heappop(events)
+            if st is None:                       # chaos marker, not a job
+                if n == "__preempt__":
+                    self.metrics["preemptions"] += 1
+                    c.dark_until = now + plan.preemption_dark_s
+                    # evict everything in flight on the struck cluster:
+                    # free its resources, bump attempts, re-ready the job
+                    victims = [s for s, (vc, _, _, _) in inflight.items()
+                               if vc is c]
+                    for vseq in victims:
+                        _, vuser, vst, vn = inflight.pop(vseq)
+                        dead.add(vseq)
+                        vjob = vst.wf.jobs[vn]
+                        vr = vjob.resources
+                        c.used_cpu -= vr.cpu
+                        c.used_mem -= vr.mem_bytes
+                        c.used_gpu -= vr.gpu
+                        vq = self._quota(vuser)
+                        vq.used_cpu -= vr.cpu
+                        vq.used_mem -= vr.mem_bytes
+                        vq.used_gpu -= vr.gpu
+                        rec = vst.run.steps[vn]
+                        rec.status = StepStatus.PENDING
+                        rec.attempts += 1
+                        rec.error = (f"preempted on {c.name} "
+                                     f"at t={now:.3f}")
+                        self.metrics["preempted_jobs"] += 1
+                        heapq.heappush(vst.ready, vst.jidx[vn])
+                        arm(vst)
+                        h = handles.get(vst.wf.name) if handles else None
+                        if h is not None:
+                            h._publish(EventType.CLUSTER_PREEMPTED,
+                                       step=vn, attempt=rec.attempts,
+                                       error=rec.error)
+                    heapq.heappush(events, (now + plan.preemption_dark_s,
+                                            next(self._seq), c, "",
+                                            None, "__recover__"))
+                    if done_local < len(active):
+                        nxt = now + rngs[c.name].expovariate(
+                            plan.preemption_rate_per_s)
+                        heapq.heappush(events, (nxt, next(self._seq), c,
+                                                "", None, "__preempt__"))
+                    launch_pass()
+                else:                            # __recover__
+                    # the cluster is placeable again: wake parked jobs
+                    for ai, i in cluster_waiters:
+                        stw = active[ai]
+                        heapq.heappush(stw.ready, i)
+                        arm(stw)
+                    cluster_waiters = []
+                    launch_pass()
+                continue
+            if chaos:
+                if seq in dead:                  # evicted before finishing
+                    dead.discard(seq)
+                    continue
+                inflight.pop(seq, None)
             job = st.wf.jobs[n]
             r = job.resources
             c.used_cpu -= r.cpu
@@ -357,6 +463,7 @@ class MultiClusterEngine(Engine):
             self.metrics["cluster_busy_s"][c.name] += busy * r.cpu
             rec.status = StepStatus.SUCCEEDED
             rec.end = now
+            last_t = now
             if self.caches is not None:
                 store = self.caches.get(c.name)
                 if store is not None:
@@ -376,6 +483,7 @@ class MultiClusterEngine(Engine):
                 st.run.status = "Succeeded"
                 st.run.wall_time_s = now
                 self.metrics["completed_workflows"] += 1
+                done_local += 1
             if newly_ready:
                 arm(st)
             # wake exactly the jobs this completion could unblock: the
@@ -390,7 +498,8 @@ class MultiClusterEngine(Engine):
                 heapq.heappush(stw.ready, i)
                 arm(stw)
             launch_pass()
-        self.metrics["makespan_s"] = now
+        # the last *completion* time (recovery markers may outlive the work)
+        self.metrics["makespan_s"] = last_t
         return runs
 
     def submit(self, wf: WorkflowIR, optimize: bool = True, user: str = "u0",
@@ -421,8 +530,10 @@ class MultiClusterEngine(Engine):
                     f"{it.tenant!r}); submit_many results are keyed by "
                     "name — rename or submit in separate batches")
             seen[it.wf.name] = it.tenant
-        runs = self.submit_many([(it.wf, it.tenant, it.priority)
-                                 for it in items])
+        runs = self.submit_many(
+            [(it.wf, it.tenant, it.priority) for it in items],
+            handles={it.wf.name: it.handle for it in items
+                     if it.handle is not None})
         for it in items:
             if it.handle is not None:
                 run = runs[it.wf.name]

@@ -37,8 +37,10 @@ from repro.core.api import StepOutput
 from repro.core.autosplit import Budget
 from repro.core.caching import CacheStore, CoulerPolicy
 from repro.core.engines.base import (Engine, StepRecord, StepStatus,
-                                     TransientError, WorkflowRun,
-                                     is_transient)
+                                     WorkflowRun)
+from repro.core.faults import (ChaosInjector, FaultPlan, FrontierStore,
+                               RetryPolicy, WorkerLost, restore_frontier,
+                               retry_after_transient)
 from repro.core.gateway.channels import (StepContext, StreamBroken,
                                          StreamCancelled, StreamReader,
                                          StreamRewound)
@@ -83,19 +85,40 @@ class LocalEngine(Engine):
                  budget: Optional[Budget] = None,
                  straggler_factor: float = 4.0,
                  retry_backoff_s: float = 0.02,
+                 retry_backoff_max_s: float = 2.0,
                  enable_speculation: bool = True,
                  max_inflight_steps: Optional[int] = None,
                  max_inflight_workflows: Optional[int] = None,
                  promote_interval_s: float = 0.25,
                  admission=None,
-                 check_events: bool = False):
+                 check_events: bool = False,
+                 fault_plan: Optional[FaultPlan] = None,
+                 frontier: bool = False,
+                 readmission=None):
         self.max_workers = max_workers
         self.cache = cache if cache is not None else CacheStore(
             capacity_bytes=1 << 30, policy=CoulerPolicy())
         self.budget = budget or Budget()
         self.straggler_factor = straggler_factor
         self.retry_backoff_s = retry_backoff_s
+        # capped exponential backoff + decorrelated jitter (faults.retry);
+        # the old inline 2**(attempt-1) formula was unbounded + jitterless
+        self.retry_policy = RetryPolicy(base_s=retry_backoff_s,
+                                        cap_s=retry_backoff_max_s)
         self.enable_speculation = enable_speculation
+        # chaos injection: consulted at every step-attempt boundary (and
+        # mid-step for checkpoint-wired jobs); None = no faults
+        self.injector = ChaosInjector(fault_plan) if fault_plan else None
+        # frontier checkpoint-resume: record per-step completion through
+        # the artifact cache after each terminal step event so a fresh
+        # engine sharing the cache can resume_from_frontier()
+        self.frontier = FrontierStore(self.cache) if frontier else None
+        # per-(workflow, step) straggler history: repeated stragglers get
+        # their speculation budget shrunk so backups launch sooner
+        self._straggler_counts: Dict[str, int] = {}
+        # checkpoint sessions: one CheckpointManager per (run, step)
+        self._ckpt_mgrs: Dict[tuple, Any] = {}
+        self._ckpt_lock = threading.Lock()
         # free-list of persistent 2-worker speculation executors, reused
         # across step invocations instead of constructing one per step
         self._spec_pools: List[cf.ThreadPoolExecutor] = []
@@ -107,7 +130,8 @@ class LocalEngine(Engine):
                                   max_inflight_workflows=max_inflight_workflows,
                                   promote_interval_s=promote_interval_s,
                                   admission=admission,
-                                  check_events=check_events)
+                                  check_events=check_events,
+                                  readmission=readmission)
 
     # ------------------------------------------------------------------
     @property
@@ -176,6 +200,25 @@ class LocalEngine(Engine):
                                             block=True)
         return handle.result()
 
+    def resume_from_frontier(self, wf: WorkflowIR, tenant: str = "default",
+                             snapshot=None) -> WorkflowRun:
+        """Crash recovery on a FRESH engine: reconstruct a run of ``wf``
+        from the frontier snapshot persisted through the artifact cache
+        (or an explicit ``snapshot`` — e.g. a ``WorkflowRun.persist``
+        file loaded via ``faults.load_run_snapshot``) and resume it.
+        Steps whose recorded cache keys still hit stay done (``Cached``,
+        artifacts restored); everything else re-runs. Requires this
+        engine's ``cache`` to be (or share a tier with) the one the
+        crashed run wrote through."""
+        if snapshot is None:
+            store = self.frontier or FrontierStore(self.cache)
+            snapshot = store.load(wf)
+        wf.validate()
+        run = restore_frontier(wf, snapshot, self.cache)
+        handle = self.gateway.submit_nowait(wf, run=run, resume=True,
+                                            tenant=tenant, block=True)
+        return handle.result()
+
     def close(self) -> None:
         """Shut down the gateway loop (stopping the background cache
         promotion task cleanly) and the speculation executors."""
@@ -205,6 +248,7 @@ class LocalEngine(Engine):
         # cache check (Algorithm 2 consumer side); non-cacheable steps skip
         # the key hash entirely (it is only ever used for get/offer)
         key = cache_key(job, run.artifacts) if job.cacheable else ""
+        rec.cache_key = key             # persisted for frontier resume
         if job.cacheable:
             hit = self.cache.get(key)
             if hit is not None:
@@ -214,9 +258,10 @@ class LocalEngine(Engine):
                 rec.end = time.time()
                 return rec.status
 
+        publish = ctx.publish if ctx is not None else None
         iterations = 0
         while True:                                   # exec_while loop
-            value, dur = self._invoke_with_retry(job, run, rec)
+            value, dur = self._invoke_with_retry(job, run, rec, publish)
             iterations += 1
             if job.loop_condition is None:
                 break
@@ -286,16 +331,22 @@ class LocalEngine(Engine):
                 key = cache_key(job, run.artifacts)
         if ch is not None:
             ch.source_key = key
+        rec.cache_key = key             # persisted for frontier resume
 
+        publish = ctx.publish if ctx else None
         failures = 0
         t0 = time.time()
         try:
             while True:
                 rec.attempts += 1
                 try:
+                    if self.injector is not None:
+                        fault, _ = self.injector.begin_attempt(
+                            run.workflow.name, job.name)
+                        if fault is not None:
+                            raise fault
                     chunks, fully_cached = self._stream_once(
-                        job, run, rec, ch, in_ch, key,
-                        ctx.publish if ctx else None)
+                        job, run, rec, ch, in_ch, key, publish)
                     break
                 except StreamRewound:
                     # upstream producer retried: restart (replaying our own
@@ -312,12 +363,14 @@ class LocalEngine(Engine):
                     return rec.status
                 except Exception as e:  # noqa: BLE001
                     failures += 1
-                    if is_transient(e) and failures <= job.retry_limit:
+                    if retry_after_transient(
+                            e, attempt=failures, retry_limit=job.retry_limit,
+                            policy=self.retry_policy, step=job.name,
+                            publish=publish):
                         # retried producer rewinds its channel: attached
                         # readers restart from chunk 0
                         if ch is not None:
                             ch.rewind()
-                        time.sleep(self.retry_backoff_s * (2 ** (failures - 1)))
                         continue
                     rec.error = f"{type(e).__name__}: {e}"
                     rec.status = StepStatus.FAILED
@@ -476,18 +529,39 @@ class LocalEngine(Engine):
         res = job.fn(*args, **job.kwargs)
         return iter(res)
 
-    def _invoke_with_retry(self, job: Job, run: WorkflowRun, rec: StepRecord):
+    def _invoke_with_retry(self, job: Job, run: WorkflowRun, rec: StepRecord,
+                           publish=None):
         attempt = 0
         while True:
             attempt += 1
             rec.attempts = attempt
             t0 = time.time()
             try:
-                value = self._invoke(job, run)
+                mid_kill = None
+                if self.injector is not None:
+                    # chaos consult, one per attempt (the step boundary):
+                    # crashes raise before the fn runs; worker loss runs
+                    # the fn and loses the result with the slot — except
+                    # for checkpoint-wired jobs, where the kill lands
+                    # MID-STEP at an injector-chosen iteration instead
+                    fault, kill_at = self.injector.begin_attempt(
+                        run.workflow.name, job.name,
+                        checkpointed=bool(job.checkpoint))
+                    if fault is not None:
+                        if kill_at is not None:
+                            mid_kill = (fault, kill_at)
+                        elif isinstance(fault, WorkerLost):
+                            self._invoke(job, run)   # work done, result
+                            raise fault              # died with the slot
+                        else:
+                            raise fault
+                value = self._invoke(job, run, mid_kill=mid_kill)
                 return value, time.time() - t0
             except Exception as e:  # noqa: BLE001
-                if is_transient(e) and attempt <= job.retry_limit:
-                    time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+                if retry_after_transient(
+                        e, attempt=attempt, retry_limit=job.retry_limit,
+                        policy=self.retry_policy, step=job.name,
+                        publish=publish):
                     continue
                 rec.error = f"{type(e).__name__}: {e}"
                 rec.status = StepStatus.FAILED
@@ -515,11 +589,41 @@ class LocalEngine(Engine):
                 return
         pool.shutdown(wait=False)
 
-    def _invoke(self, job: Job, run: WorkflowRun):
+    def _ckpt_session(self, job: Job, run: WorkflowRun, mid_kill):
+        """Build the ``ckpt=`` session handed to a checkpoint-wired step.
+        One ``CheckpointManager`` per (run, step) — shared across retry
+        attempts AND re-admissions (same run_id), and rooted at the
+        user-chosen directory so a fresh engine resumes from disk."""
+        from repro.training.checkpoint import (CheckpointManager,
+                                               StepCheckpointSession)
+        mkey = (run.run_id, job.name)
+        with self._ckpt_lock:
+            mgr = self._ckpt_mgrs.get(mkey)
+            if mgr is None:
+                mgr = CheckpointManager(job.checkpoint)
+                self._ckpt_mgrs[mkey] = mgr
+        on_tick = None
+        if mid_kill is not None:
+            exc, kill_at = mid_kill
+
+            def on_tick(it, _exc=exc, _at=kill_at):
+                if it >= _at:
+                    raise _exc
+        return StepCheckpointSession(mgr, on_tick=on_tick)
+
+    def _invoke(self, job: Job, run: WorkflowRun, mid_kill=None):
         if job.fn is None:
             return " ".join(job.command) or job.name   # container no-op
         args = [run.artifacts.get(a.artifact) if isinstance(a, StepOutput)
                 else a for a in job.args]
+
+        if job.checkpoint:
+            # checkpoint-wired step: fn(..., ckpt=session) saves/restores
+            # through training.checkpoint. No speculation — two racers
+            # would share one checkpoint directory.
+            kwargs = dict(job.kwargs)
+            kwargs["ckpt"] = self._ckpt_session(job, run, mid_kill)
+            return job.fn(*args, **kwargs)
 
         if not self.enable_speculation:
             return job.fn(*args, **job.kwargs)
@@ -529,13 +633,21 @@ class LocalEngine(Engine):
         # persistent free-list (idle ones are reused across steps).
         spec_pool = self._spec_pool_acquire()
         futures: List[cf.Future] = []
+        site = f"{run.workflow.name}/{job.name}"
         try:
             primary = spec_pool.submit(job.fn, *args, **job.kwargs)
             futures.append(primary)
-            budget_s = max(0.05, self.straggler_factor * job.est_time_s)
+            # repeated stragglers get speculation prioritized: each prior
+            # straggler episode halves the patience before the backup
+            budget_s = max(0.05, self.straggler_factor * job.est_time_s
+                           / (1 + self._straggler_counts.get(site, 0)))
             try:
                 return primary.result(timeout=budget_s)
             except cf.TimeoutError:
+                # straggler observed (benign race on the counter: a lost
+                # increment only delays the prioritization by one episode)
+                self._straggler_counts[site] = \
+                    self._straggler_counts.get(site, 0) + 1
                 # the backup counts against the gateway's global
                 # max_inflight_steps bound: reserve a slot (non-blocking) or
                 # skip speculation — backups must not exceed the bound the

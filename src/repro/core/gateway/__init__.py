@@ -26,11 +26,29 @@ ordered sequence of ``WorkflowEvent``s:
 ``STEP_CHUNK``
     One chunk delivered into the step's artifact channel (or replayed
     from the chunk-granular cache); ``chunk`` is its 0-based index.
+``STEP_RETRY``
+    A transient failure was absorbed and the step is about to re-run;
+    ``attempt`` is the attempt number about to execute (so attempts on a
+    step's retries strictly increase). Emitted on every retry — organic
+    ``TransientError``s and injected chaos alike.
+``WORKER_LOST``
+    The pool slot executing the step died (``repro.core.faults``
+    worker-loss injection); ``attempt`` is the attempt that died. Always
+    followed by either a ``STEP_RETRY`` or the step's ``STEP_FAILED``.
 ``STEP_SUCCEEDED`` / ``STEP_CACHED`` / ``STEP_SKIPPED`` / ``STEP_FAILED``
     The step's terminal status: executed, served from the artifact store
     (Algorithm 2 consumer side), skipped by its ``couler.when`` condition,
     or failed after exhausting the transient-error retry budget. Always
     preceded by that step's ``STEP_STARTED``.
+``CLUSTER_PREEMPTED``
+    Run-scoped (``MultiClusterEngine`` chaos): the cluster running
+    ``step`` went dark and evicted it; the job re-enters placement.
+``WORKFLOW_REQUEUED``
+    The run failed but a ``ReadmissionPolicy`` accepted it back into the
+    admission queue (capped exponential backoff + priority aging);
+    ``attempt`` is the re-admission round. Opens a new *epoch*: completed
+    steps stay completed, failed steps reset to Pending and may emit a
+    fresh ``STEP_STARTED``.
 ``WORKFLOW_DONE``
     Terminal; exactly one per run, always last, with ``status`` in
     ``{"Succeeded", "Failed", "Cancelled"}``. A cancelled run keeps its
@@ -59,6 +77,13 @@ sanitizer mode — so a breach raises at the offending publish. In prose:
 6. A consumer's ``STEP_STARTED`` may precede its producer's terminal
    event (that is the point of streaming) but never the producer's
    ``STEP_STREAMING``.
+7. ``STEP_RETRY`` / ``WORKER_LOST`` fall strictly between their own
+   step's ``STEP_STARTED`` and terminal event, and a step's
+   ``STEP_RETRY`` attempt numbers strictly increase within an epoch.
+8. ``WORKFLOW_REQUEUED`` falls strictly between admission and the
+   terminal event and resets the checker's per-step bookkeeping (new
+   epoch — re-admitted steps may legally re-emit ``STEP_STARTED``);
+   ``CLUSTER_PREEMPTED`` may appear anywhere in that same span.
 
 Exception (encoded in the checker's cancel scoping): a step interrupted
 *mid-stream* by cooperative cancellation is reverted to ``Pending`` (the

@@ -53,6 +53,9 @@ class AdmittedItem:
     resume: bool = False
     handle: Optional["AsyncWorkflowRun"] = None
     offered_at: float = field(default_factory=time.time)
+    # times this run has re-entered the queue after failure (gateway
+    # re-admission); the first offer of a handle is readmit_count == 0
+    readmit_count: int = 0
 
 
 class AdmissionQueue:
@@ -106,9 +109,11 @@ class AdmissionQueue:
                     self.stats["shed"] += 1
                     raise QueueFull(item.tenant, depth,
                                     self.max_depth_per_tenant)
-            if item.handle is not None:
+            if item.handle is not None and not item.readmit_count:
                 # under the lock, before the item is poppable: ADMITTED
-                # is guaranteed to precede every STEP_* of this run
+                # is guaranteed to precede every STEP_* of this run.
+                # Re-admitted runs already announced WORKFLOW_REQUEUED;
+                # ADMITTED stays unique (invariant 1).
                 item.handle._publish(EventType.WORKFLOW_ADMITTED)
             if item.tenant not in self._queues:
                 self._queues[item.tenant] = deque()

@@ -16,15 +16,20 @@ class EventType(str, enum.Enum):
     STEP_STARTED = "STEP_STARTED"             # step handed to the worker pool
     STEP_STREAMING = "STEP_STREAMING"         # step is emitting chunks
     STEP_CHUNK = "STEP_CHUNK"                 # one chunk emitted (see .chunk)
+    STEP_RETRY = "STEP_RETRY"                 # transient failure; retrying
+    WORKER_LOST = "WORKER_LOST"               # pool slot died mid-execution
     STEP_SUCCEEDED = "STEP_SUCCEEDED"
     STEP_CACHED = "STEP_CACHED"               # outputs served from the store
     STEP_SKIPPED = "STEP_SKIPPED"             # couler.when condition false
     STEP_FAILED = "STEP_FAILED"
+    CLUSTER_PREEMPTED = "CLUSTER_PREEMPTED"   # run-scope: cluster went dark
+    WORKFLOW_REQUEUED = "WORKFLOW_REQUEUED"   # failed run re-enters admission
     WORKFLOW_DONE = "WORKFLOW_DONE"           # terminal; exactly one per run
 
 
 STEP_EVENTS = frozenset({EventType.STEP_STARTED, EventType.STEP_STREAMING,
-                         EventType.STEP_CHUNK, EventType.STEP_SUCCEEDED,
+                         EventType.STEP_CHUNK, EventType.STEP_RETRY,
+                         EventType.WORKER_LOST, EventType.STEP_SUCCEEDED,
                          EventType.STEP_CACHED, EventType.STEP_SKIPPED,
                          EventType.STEP_FAILED})
 
@@ -37,7 +42,10 @@ class WorkflowEvent:
     event); ``status`` carries the step status for STEP_* events and the
     terminal run status ("Succeeded"/"Failed"/"Cancelled") for
     WORKFLOW_DONE. ``chunk`` is the 0-based chunk index for STEP_CHUNK
-    events (-1 otherwise).
+    events (-1 otherwise). ``attempt`` is the 1-based attempt number for
+    retry-related events: the attempt about to run for STEP_RETRY, the
+    attempt that died for WORKER_LOST / CLUSTER_PREEMPTED, the admission
+    round for WORKFLOW_REQUEUED (0 when not applicable).
     """
 
     type: EventType
@@ -48,6 +56,7 @@ class WorkflowEvent:
     status: str = ""
     error: str = ""
     chunk: int = -1
+    attempt: int = 0
     seq: int = -1
     ts: float = 0.0
 

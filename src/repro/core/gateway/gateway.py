@@ -79,11 +79,18 @@ class WorkflowGateway:
                  max_inflight_workflows: Optional[int] = None,
                  admission: Optional[AdmissionQueue] = None,
                  promote_interval_s: float = 0.25,
-                 check_events: bool = False):
+                 check_events: bool = False,
+                 readmission=None):
         self.engine = engine
         # sanitizer mode: attach a TraceChecker to every run's publish
         # path so an invariant breach raises at the offending event
         self.check_events = check_events
+        # straggler-aware re-admission: a failed (not cancelled) run
+        # re-enters the admission queue after a capped, jittered backoff
+        # with aged priority (repro.core.faults.ReadmissionPolicy); the
+        # satisfied step frontier is kept, failed steps reset. None (the
+        # default) keeps failures terminal.
+        self.readmission = readmission
         self.max_workers = max_workers or getattr(engine, "max_workers", 8)
         self.max_inflight_steps = (max_inflight_steps
                                    if max_inflight_steps
@@ -93,7 +100,8 @@ class WorkflowGateway:
             AdmissionQueue()
         self.promote_interval_s = promote_interval_s
         self.stats = {"submitted": 0, "completed": 0, "failed": 0,
-                      "cancelled": 0, "peak_inflight_steps": 0}
+                      "cancelled": 0, "readmitted": 0,
+                      "peak_inflight_steps": 0}
         self._inflight_steps = 0
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
@@ -286,6 +294,9 @@ class WorkflowGateway:
             dt = time.time() - t0
             run.wall_time_s = run.wall_time_s + dt if item.resume else dt
             if not ok:
+                if self._maybe_readmit(item, run, handle):
+                    await loop.run_in_executor(self._pool, run.persist)
+                    return          # handle finishes on a later round trip
                 run.status = "Failed"
                 self.stats["failed"] += 1
             elif handle.cancel_requested and any(
@@ -310,6 +321,71 @@ class WorkflowGateway:
             handle._publish(EventType.WORKFLOW_DONE, status="Failed",
                             error=f"{type(e).__name__}: {e}")
             handle._fail(e)
+
+    # -- straggler-aware re-admission --------------------------------------
+    def _maybe_readmit(self, item: AdmittedItem, run: WorkflowRun,
+                       handle: AsyncWorkflowRun) -> bool:
+        """Failed-run recovery (loop thread): when a re-admission policy
+        allows another round trip, reset the unsatisfied steps, announce
+        ``WORKFLOW_REQUEUED`` (a new checker epoch), and schedule the
+        backoff re-offer. The handle stays unfinished — callers keep
+        awaiting the same run across round trips."""
+        pol = self.readmission
+        if pol is None or handle.cancel_requested or self._closed \
+                or not pol.should_readmit(item.readmit_count):
+            return False
+        failed = sorted(n for n, r in run.steps.items()
+                        if r.status == StepStatus.FAILED)
+        keep = (StepStatus.SUCCEEDED, StepStatus.SKIPPED, StepStatus.CACHED)
+        for n, rec in run.steps.items():
+            if rec.status not in keep:
+                run.steps[n] = StepRecord()
+        run.status = "Queued"
+        item.readmit_count += 1
+        item.resume = True              # keep the satisfied frontier
+        item.priority = pol.aged_priority(item.priority)
+        self.stats["readmitted"] += 1
+        handle._publish(EventType.WORKFLOW_REQUEUED,
+                        attempt=item.readmit_count,
+                        error=f"steps failed: {', '.join(failed)}"
+                              if failed else "")
+        delay = pol.delay_s(item.readmit_count)
+        asyncio.get_running_loop().create_task(
+            self._requeue_later(item, delay))
+        return True
+
+    async def _requeue_later(self, item: AdmittedItem, delay: float) -> None:
+        handle, run = item.handle, item.handle.run
+        try:
+            await asyncio.sleep(delay)
+        except asyncio.CancelledError:
+            # gateway shutdown mid-backoff: finish the handle so sync
+            # waiters unblock; the persisted run stays resumable
+            run.status = "Cancelled"
+            handle._publish(EventType.WORKFLOW_DONE, status="Cancelled")
+            handle._finish(run)
+            raise
+        if handle.cancel_requested:
+            run.status = "Cancelled"
+            self.stats["cancelled"] += 1
+            handle._publish(EventType.WORKFLOW_DONE, status="Cancelled")
+            handle._finish(run)
+            return
+        # block=True from an executor thread: re-admission must not shed
+        await asyncio.get_running_loop().run_in_executor(
+            None, lambda: self.admission.offer(item, block=True))
+
+    def _record_frontier(self, run: WorkflowRun) -> None:
+        """Fire-and-forget frontier snapshot through the engine's
+        ``FrontierStore`` (if attached) after each step terminal event —
+        the persistence half of checkpoint-resume."""
+        store = getattr(self.engine, "frontier", None)
+        if store is None:
+            return
+        try:
+            self._pool.submit(store.record, run)
+        except RuntimeError:            # pool shutting down
+            pass
 
     async def _run_part(self, wfp: WorkflowIR, run: WorkflowRun,
                         handle: AsyncWorkflowRun) -> bool:
@@ -466,6 +542,7 @@ class WorkflowGateway:
                                                   EventType.STEP_FAILED),
                             step=name, status=status.value,
                             error=run.steps[name].error)
+                        self._record_frontier(run)
             finally:
                 finish_one(name, status)
 

@@ -139,7 +139,8 @@ class AsyncWorkflowRun:
 
     # -- gateway-internal publishing ---------------------------------------
     def _publish(self, type_: EventType, step: str = "", status: str = "",
-                 error: str = "", chunk: int = -1) -> WorkflowEvent:
+                 error: str = "", chunk: int = -1,
+                 attempt: int = 0) -> WorkflowEvent:
         # seq assignment and history append happen under one lock: chunk
         # events arrive from worker threads concurrently with loop-thread
         # lifecycle events, and history must stay seq-sorted
@@ -147,8 +148,8 @@ class AsyncWorkflowRun:
             ev = WorkflowEvent(type=type_, workflow=self.workflow_name,
                                run_id=self.run_id, tenant=self.tenant,
                                step=step, status=status, error=error,
-                               chunk=chunk, seq=next(self._seq),
-                               ts=time.time())
+                               chunk=chunk, attempt=attempt,
+                               seq=next(self._seq), ts=time.time())
             self._history.append(ev)
             dead = []
             for sub in self._subs:

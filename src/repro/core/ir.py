@@ -99,6 +99,11 @@ class Job:
     stream_input: bool = False
     stream_arg: Optional[str] = None
     stream_buffer_chunks: int = 8
+    # checkpoint-wired step (couler.add_job(..., checkpoint=dir)): the fn
+    # receives a ckpt= StepCheckpointSession saving/restoring through
+    # training.checkpoint, so an intra-step kill resumes from the latest
+    # checkpoint instead of the step's start
+    checkpoint: Optional[str] = None
 
     def spec_size_bytes(self) -> int:
         """Serialized-spec size of this job — the CRD-size budget component."""

@@ -129,3 +129,41 @@ class CheckpointManager:
             for f in p.glob("*"):
                 f.unlink()
             p.rmdir()
+
+
+class StepCheckpointSession:
+    """The ``ckpt=`` handle a checkpoint-wired workflow step receives
+    (``couler.add_job(..., checkpoint=dir)`` — see ``repro.core.faults``).
+
+    Thin veneer over a ``CheckpointManager`` shared across the step's
+    retry attempts: the fn probes ``latest_step()`` on entry, restores
+    and continues if a prior (killed) attempt left progress, and calls
+    ``save(step, state)`` as it goes. ``tick``/``save`` are also the
+    runtime's mid-step interruption points — chaos worker-loss kills are
+    delivered there, BEFORE the state persists, so a kill at iteration k
+    resumes from k-1's checkpoint.
+    """
+
+    def __init__(self, manager: CheckpointManager,
+                 on_tick: Optional[Callable[[int], None]] = None):
+        self.manager = manager
+        self._on_tick = on_tick
+        self.resumed_from: Optional[int] = None
+
+    def latest_step(self) -> Optional[int]:
+        return self.manager.latest_step()
+
+    def restore(self, step: Optional[int] = None, **kw) -> Dict[str, Any]:
+        out = self.manager.restore(step=step, **kw)
+        self.resumed_from = (step if step is not None
+                             else self.manager.latest_step())
+        return out
+
+    def tick(self, iteration: int) -> None:
+        """Announce an iteration boundary (an interruption point)."""
+        if self._on_tick is not None:
+            self._on_tick(iteration)
+
+    def save(self, step: int, state: Dict[str, Any]) -> Path:
+        self.tick(step)
+        return self.manager.save(step, state)

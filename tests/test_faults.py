@@ -1,0 +1,410 @@
+"""Chaos-hardened workflows (repro.core.faults).
+
+Pins the fault-tolerance contract: deterministic seeded fault injection
+(identical replay), capped+jittered retry backoff with STEP_RETRY /
+WORKER_LOST events, frontier checkpoint-resume on a *fresh* engine,
+checkpoint-wired steps resuming mid-step after a worker-loss kill,
+simulated cluster preemption with job re-placement, straggler-aware
+re-admission (backoff + priority aging), and the TraceChecker invariants
+(7, 8) that make all of it auditable.
+"""
+import tempfile
+
+import pytest
+
+from repro.core import couler
+from repro.core.analysis import TraceChecker, TraceViolation
+from repro.core.caching import CacheStore
+from repro.core.engines.base import StepStatus, TransientError
+from repro.core.engines.cluster import Cluster, MultiClusterEngine
+from repro.core.engines.local import LocalEngine
+from repro.core.faults import (ChaosInjector, FaultPlan, ReadmissionPolicy,
+                               RetryPolicy, capped_jittered_delay)
+from repro.core.gateway import AdmissionQueue, AdmittedItem, EventType
+from repro.core.gateway.events import WorkflowEvent
+from repro.core.gateway.run import AsyncWorkflowRun
+from repro.core.ir import Job, Resources, WorkflowIR
+
+
+def build_chain(name="flt"):
+    with couler.workflow(name) as ir:
+        a = couler.run_step(lambda: 2, step_name="a")
+        b = couler.run_step(lambda x: x * 3, a, step_name="b")
+        couler.run_step(lambda x: x + 1, b, step_name="c")
+    return ir
+
+
+def _engine(**kw):
+    kw.setdefault("cache", CacheStore())
+    kw.setdefault("enable_speculation", False)
+    kw.setdefault("check_events", True)         # inline sanitizer
+    kw.setdefault("retry_backoff_s", 0.001)
+    kw.setdefault("retry_backoff_max_s", 0.01)
+    return LocalEngine(**kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / ChaosInjector determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_rejects_oversubscribed_rates():
+    with pytest.raises(ValueError, match="sum"):
+        FaultPlan(crash_rate=0.6, permanent_rate=0.3, worker_loss_rate=0.3)
+
+
+def _fault_sequence(plan, n=40):
+    inj = ChaosInjector(plan)
+    seq = []
+    for i in range(n):
+        f, at = inj.begin_attempt("wf", f"s{i % 5}")
+        seq.append((type(f).__name__ if f else None, at))
+    return seq, inj
+
+
+def test_injector_replay_is_deterministic():
+    plan = FaultPlan(seed=11, crash_rate=0.3, worker_loss_rate=0.2,
+                     max_failures_per_site=100)
+    s1, i1 = _fault_sequence(plan)
+    s2, i2 = _fault_sequence(plan)
+    assert s1 == s2
+    assert i1.stats == i2.stats
+    assert i1.stats["crash"] > 0 and i1.stats["worker_lost"] > 0
+    s3, _ = _fault_sequence(FaultPlan(seed=12, crash_rate=0.3,
+                                      worker_loss_rate=0.2,
+                                      max_failures_per_site=100))
+    assert s3 != s1                              # seed actually matters
+
+
+def test_injector_cap_and_targets():
+    plan = FaultPlan(seed=0, crash_rate=1.0, max_failures_per_site=2,
+                     targets=frozenset(["hit", "wf/qualified"]))
+    inj = ChaosInjector(plan)
+    hits = [inj.begin_attempt("wf", "hit")[0] for _ in range(5)]
+    assert sum(f is not None for f in hits) == 2     # hard cap converges
+    assert all(inj.begin_attempt("wf", "miss")[0] is None for _ in range(5))
+    # qualified "workflow/step" targets match too
+    assert inj.begin_attempt("wf", "qualified")[0] is not None
+    assert inj.injected_at("wf", "hit") == 2
+
+
+def test_end_to_end_injection_replays_identically():
+    plan = FaultPlan(seed=3, crash_rate=0.5, max_failures_per_site=2)
+    attempts = []
+    for _ in range(2):
+        run = _engine(fault_plan=plan).submit(build_chain())
+        assert run.succeeded()
+        attempts.append({k: r.attempts for k, r in run.steps.items()})
+    assert attempts[0] == attempts[1]
+    assert sum(attempts[0].values()) > 3             # something was injected
+
+
+# ---------------------------------------------------------------------------
+# retry backoff: cap + jitter, STEP_RETRY / WORKER_LOST events
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_capped_and_jittered():
+    pol = RetryPolicy(base_s=0.1, cap_s=1.5, jitter=True)
+    delays = [pol.delay_s(a) for a in range(1, 12)]
+    assert all(0 < d <= 1.5 for d in delays)         # never exceeds the cap
+    # no jitter -> pure capped exponential, deterministic
+    flat = RetryPolicy(base_s=0.1, cap_s=1.5, jitter=False)
+    assert [flat.delay_s(a) for a in (1, 2, 3, 6, 10)] == \
+           [0.1, 0.2, 0.4, 1.5, 1.5]
+    assert capped_jittered_delay(50, 0.1, 2.0, jitter=False) == 2.0
+
+
+def test_step_retry_events_on_every_retry():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientError(f"flake {calls['n']}")
+        return x + 1
+
+    wf = WorkflowIR("retry-ev")
+    wf.add_job(Job(name="s", fn=flaky, args=(1,), cacheable=False,
+                   outputs=["s:out"], retry_limit=3))
+    eng = _engine()
+    handle = eng.gateway.submit_nowait(wf, block=True)
+    run = handle.result()
+    assert run.succeeded() and run.steps["s"].attempts == 3
+    retries = [e for e in handle.events_so_far()
+               if e.type is EventType.STEP_RETRY]
+    assert [e.attempt for e in retries] == [2, 3]    # one per retry, ascending
+    TraceChecker.check(handle.events_so_far(), wf=wf)
+
+
+def test_worker_loss_emits_event_and_recovers():
+    plan = FaultPlan(seed=2, worker_loss_rate=1.0, max_failures_per_site=1)
+    eng = _engine(fault_plan=plan)
+    wf = build_chain("wl")
+    handle = eng.gateway.submit_nowait(wf, block=True)
+    run = handle.result()
+    assert run.succeeded()
+    evs = handle.events_so_far()
+    lost = [e for e in evs if e.type is EventType.WORKER_LOST]
+    assert lost and all(e.attempt >= 1 for e in lost)
+    # every loss is absorbed: a STEP_RETRY for the same step follows
+    types = [(e.type, e.step) for e in evs]
+    for e in lost:
+        assert types.index((EventType.STEP_RETRY, e.step)) > \
+               types.index((EventType.WORKER_LOST, e.step))
+    TraceChecker.check(evs, wf=wf)
+
+
+def test_permanent_crash_is_not_absorbed():
+    plan = FaultPlan(seed=0, permanent_rate=1.0, max_failures_per_site=1)
+    run = _engine(fault_plan=plan).submit(build_chain("perm"))
+    assert run.status == "Failed"
+    failed = [r for r in run.steps.values() if r.status == StepStatus.FAILED]
+    assert len(failed) == 1 and failed[0].attempts == 1   # no retry burned
+    assert "injected permanent crash" in failed[0].error
+
+
+# ---------------------------------------------------------------------------
+# frontier checkpoint-resume
+# ---------------------------------------------------------------------------
+
+def test_frontier_restore_on_fresh_engine():
+    cache = CacheStore()
+    plan = FaultPlan(seed=0, permanent_rate=1.0, max_failures_per_site=1,
+                     targets=frozenset(["fr/c"]))
+    eng_a = _engine(cache=cache, fault_plan=plan, frontier=True)
+    run_a = eng_a.submit(build_chain("fr"))
+    assert run_a.status == "Failed"
+    assert run_a.steps["a"].status == StepStatus.SUCCEEDED
+    assert run_a.steps["c"].status == StepStatus.FAILED
+
+    # a brand-new engine/gateway (fresh process stand-in) sharing only the
+    # cache reconstructs the completion frontier and finishes the run
+    eng_b = _engine(cache=cache, frontier=True)
+    run_b = eng_b.resume_from_frontier(build_chain("fr"))
+    assert run_b.succeeded()
+    assert run_b.steps["a"].status == StepStatus.CACHED
+    assert run_b.steps["b"].status == StepStatus.CACHED
+    assert run_b.steps["c"].status == StepStatus.SUCCEEDED
+    assert run_b.artifacts["c:out"] == 7
+
+
+def test_frontier_resume_without_prior_state_runs_everything():
+    eng = _engine(frontier=True)
+    run = eng.resume_from_frontier(build_chain("cold"))
+    assert run.succeeded()
+    assert all(r.status == StepStatus.SUCCEEDED for r in run.steps.values())
+
+
+def test_checkpoint_wired_step_resumes_mid_step():
+    iters = 6
+    work_log = []
+
+    def train(n, ckpt=None):
+        start, total = 0, 0
+        if ckpt.latest_step() is not None:
+            state = ckpt.restore()
+            start, total = int(state["i"]) + 1, int(state["acc"])
+        for i in range(start, n):
+            ckpt.tick(i)                      # interruption point
+            work_log.append(i)
+            total += i
+            ckpt.save(i, {"i": i, "acc": total})
+        return total
+
+    with tempfile.TemporaryDirectory() as td:
+        with couler.workflow("ck") as ir:
+            couler.add_job(train, iters, checkpoint=td + "/ck",
+                           step_name="train", retry_limit=8)
+        plan = FaultPlan(seed=5, worker_loss_rate=1.0,
+                         max_failures_per_site=2, mid_step_kill_window=4,
+                         targets=frozenset(["ck/train"]))
+        eng = _engine(fault_plan=plan)
+        run = eng.submit(ir)
+    assert run.succeeded()
+    assert eng.injector.stats["mid_step_kill"] == 2
+    assert run.artifacts["train:out"] == sum(range(iters))
+    assert run.steps["train"].attempts == 3
+    # the kills did NOT restart from scratch: total iteration executions
+    # stay below attempts * iters (progress survived via the checkpoint)
+    assert len(work_log) < run.steps["train"].attempts * iters
+
+
+# ---------------------------------------------------------------------------
+# simulated cluster preemption (MultiClusterEngine)
+# ---------------------------------------------------------------------------
+
+def _cluster_wf(i):
+    wf = WorkflowIR(f"wf{i}")
+    wf.add_job(Job(name="a", est_time_s=1.0, resources=Resources(cpu=4)))
+    wf.add_job(Job(name="b", est_time_s=2.0, resources=Resources(cpu=4)))
+    wf.add_edge("a", "b")
+    return wf
+
+
+def test_preempted_cluster_jobs_are_replaced():
+    plan = FaultPlan(seed=7, preemption_rate_per_s=0.4,
+                     preemption_dark_s=3.0)
+    q = AdmissionQueue()
+    handles = {}
+    for i in range(6):
+        wf = _cluster_wf(i)
+        h = AsyncWorkflowRun(wf.name)
+        handles[wf.name] = h
+        q.offer(AdmittedItem(wf=wf, tenant="u0", handle=h))
+    eng = MultiClusterEngine(clusters=[
+        Cluster("a", cpu=8, mem_bytes=1 << 40),
+        Cluster("b", cpu=8, mem_bytes=1 << 40)], fault_plan=plan)
+    runs = eng.submit_admitted(q)
+    assert all(r.succeeded() for r in runs.values())
+    assert eng.metrics["preemptions"] > 0
+    assert eng.metrics["preempted_jobs"] > 0
+    preempted = [e for h in handles.values() for e in h.events_so_far()
+                 if e.type is EventType.CLUSTER_PREEMPTED]
+    assert len(preempted) == eng.metrics["preempted_jobs"]
+    assert all(e.step and e.attempt >= 1 for e in preempted)
+    for h in handles.values():                  # streams stay invariant-clean
+        TraceChecker.check(h.events_so_far())
+    # an evicted job's attempts are bumped in its run record
+    bumped = [r for r in runs.values()
+              if any(rec.attempts > 0 for rec in r.steps.values())]
+    assert bumped
+
+
+def test_cluster_scheduling_unchanged_without_plan():
+    def batch():
+        return [(_cluster_wf(i), "u0", 0) for i in range(4)]
+    e1 = MultiClusterEngine(clusters=[Cluster("a", cpu=8,
+                                              mem_bytes=1 << 40)])
+    e2 = MultiClusterEngine(clusters=[Cluster("a", cpu=8,
+                                              mem_bytes=1 << 40)],
+                            fault_plan=None)
+    r1, r2 = e1.submit_many(batch()), e2.submit_many(batch())
+    assert e1.metrics["makespan_s"] == e2.metrics["makespan_s"]
+    assert {k: r.wall_time_s for k, r in r1.items()} == \
+           {k: r.wall_time_s for k, r in r2.items()}
+
+
+# ---------------------------------------------------------------------------
+# straggler-aware re-admission
+# ---------------------------------------------------------------------------
+
+def test_readmission_policy_units():
+    pol = ReadmissionPolicy(base_backoff_s=0.1, max_backoff_s=1.0,
+                            max_readmissions=3, aging_priority_step=2,
+                            jitter=False)
+    assert [pol.delay_s(n) for n in (1, 2, 3, 8)] == [0.1, 0.2, 0.4, 1.0]
+    assert pol.should_readmit(0) and pol.should_readmit(2)
+    assert not pol.should_readmit(3)
+    assert pol.aged_priority(5) == 7
+    jit = ReadmissionPolicy(base_backoff_s=0.1, max_backoff_s=1.0)
+    assert all(0 < jit.delay_s(n) <= 1.0 for n in range(1, 20))
+
+
+def test_failed_workflow_is_readmitted_and_recovers():
+    # every attempt crashes until the per-site cap: the in-run retry
+    # budget (retry_limit=3 -> 4 attempts) exhausts first, the workflow
+    # fails, re-enters admission with backoff+aging, and succeeds once
+    # the injector's cap converges
+    plan = FaultPlan(seed=1, crash_rate=1.0, max_failures_per_site=5)
+    eng = _engine(fault_plan=plan,
+                  readmission=ReadmissionPolicy(base_backoff_s=0.005,
+                                                max_backoff_s=0.05))
+    wf = build_chain("readmit")
+    handle = eng.gateway.submit_nowait(wf, block=True)
+    run = handle.result()
+    assert run.succeeded()
+    assert eng.gateway.stats["readmitted"] >= 1
+    evs = handle.events_so_far()
+    requeues = [e for e in evs if e.type is EventType.WORKFLOW_REQUEUED]
+    assert requeues
+    assert [e.attempt for e in requeues] == \
+           list(range(1, len(requeues) + 1))        # admission rounds count up
+    assert all("steps failed" in e.error for e in requeues)
+    # a STEP_FAILED precedes the first requeue; the terminal is Succeeded
+    types = [e.type for e in evs]
+    assert types.index(EventType.STEP_FAILED) < \
+           types.index(EventType.WORKFLOW_REQUEUED)
+    assert evs[-1].type is EventType.WORKFLOW_DONE
+    assert evs[-1].status == "Succeeded"
+    TraceChecker.check(evs, wf=wf)
+
+
+def test_readmission_gives_up_after_cap():
+    plan = FaultPlan(seed=1, permanent_rate=1.0, max_failures_per_site=100)
+    eng = _engine(fault_plan=plan,
+                  readmission=ReadmissionPolicy(base_backoff_s=0.001,
+                                                max_backoff_s=0.01,
+                                                max_readmissions=2))
+    run = eng.submit(build_chain("doomed"))
+    assert run.status == "Failed"
+    assert eng.gateway.stats["readmitted"] == 2
+
+
+def test_repeated_straggler_speculation_prioritized():
+    # a site that straggled before gets its speculation budget shrunk, so
+    # the backup copy launches sooner on later runs
+    eng = LocalEngine(cache=CacheStore(), enable_speculation=True,
+                      straggler_factor=2.0)
+    eng._straggler_counts["wf/slow"] = 3
+    job = Job(name="slow", fn=lambda: 1, est_time_s=1.0)
+    budget_fresh = max(0.05, eng.straggler_factor * job.est_time_s / 1)
+    budget_repeat = max(0.05, eng.straggler_factor * job.est_time_s
+                        / (1 + eng._straggler_counts["wf/slow"]))
+    assert budget_repeat < budget_fresh
+
+
+# ---------------------------------------------------------------------------
+# TraceChecker invariants 7 & 8
+# ---------------------------------------------------------------------------
+
+def _ev(type_, step="", status="", attempt=0, seq=0):
+    return WorkflowEvent(type=type_, workflow="w", run_id="r", tenant="t",
+                         step=step, status=status, attempt=attempt, seq=seq)
+
+
+def _stream(*specs):
+    return [_ev(*spec, seq=i) for i, spec in enumerate(specs)]
+
+
+def test_trace_checker_catches_retry_violations():
+    # retry before its STEP_STARTED
+    bad = _stream((EventType.WORKFLOW_ADMITTED,),
+                  (EventType.STEP_RETRY, "s", "", 2))
+    with pytest.raises(TraceViolation, match="invariant 7"):
+        TraceChecker.check(bad)
+    # non-increasing attempt numbers
+    bad = _stream((EventType.WORKFLOW_ADMITTED,),
+                  (EventType.STEP_STARTED, "s"),
+                  (EventType.STEP_RETRY, "s", "", 2),
+                  (EventType.STEP_RETRY, "s", "", 2))
+    with pytest.raises(TraceViolation, match="invariant 7"):
+        TraceChecker.check(bad)
+    # WORKER_LOST after the step's terminal event
+    bad = _stream((EventType.WORKFLOW_ADMITTED,),
+                  (EventType.STEP_STARTED, "s"),
+                  (EventType.STEP_SUCCEEDED, "s"),
+                  (EventType.WORKER_LOST, "s", "", 1))
+    with pytest.raises(TraceViolation, match="invariant 7"):
+        TraceChecker.check(bad)
+
+
+def test_trace_checker_requeue_epoch():
+    # a requeued run may legally re-announce STEP_STARTED...
+    ok = _stream((EventType.WORKFLOW_ADMITTED,),
+                 (EventType.STEP_STARTED, "s"),
+                 (EventType.STEP_FAILED, "s"),
+                 (EventType.WORKFLOW_REQUEUED, "", "", 1),
+                 (EventType.STEP_STARTED, "s"),
+                 (EventType.STEP_RETRY, "s", "", 2),
+                 (EventType.STEP_SUCCEEDED, "s"),
+                 (EventType.WORKFLOW_DONE, "", "Succeeded"))
+    checker = TraceChecker.check(ok)
+    assert checker.epoch == 1
+    # ...but a REQUEUED before admission is invariant 8
+    with pytest.raises(TraceViolation, match="invariant 8"):
+        TraceChecker.check(_stream((EventType.WORKFLOW_REQUEUED, "", "", 1)))
+    # duplicate STEP_STARTED *within* an epoch is still invariant 3
+    bad = _stream((EventType.WORKFLOW_ADMITTED,),
+                  (EventType.STEP_STARTED, "s"),
+                  (EventType.STEP_STARTED, "s"))
+    with pytest.raises(TraceViolation, match="invariant 3"):
+        TraceChecker.check(bad)
