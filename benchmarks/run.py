@@ -48,6 +48,10 @@ SUITES = [
          all(r["within_crd_budget"] for r in rows))),
     ("throughput_rq1", "benchmarks.bench_throughput", {"n_workflows": 300},
      lambda rows: "workflows_per_s=" + str(rows[0]["workflows_per_s"])),
+    ("observability_overhead", "benchmarks.bench_obs", {"n_workflows": 2000},
+     lambda rows: "overhead_pct=%s_under_2pct=%s_inc_ns=%s" % (
+         rows[0]["overhead_pct"], rows[0]["overhead_under_2pct"],
+         rows[1]["counter_inc_ns"])),
     ("analysis_overhead", "benchmarks.bench_analysis", {"n_workflows": 2000},
      lambda rows: "lint_pct_of_submit=%s_under_2pct=%s_linear=%s" % (
          rows[0]["overhead_pct"], rows[0]["overhead_under_2pct"],
@@ -118,9 +122,35 @@ def main(argv=None) -> None:
             failures.append((name, repr(e)))
             consolidated["suites"][name] = {"error": repr(e)}
             print(f"{name},0,ERROR:{type(e).__name__}")
+    # bench trajectory: compare this run's per-suite wall clocks against
+    # the most recent previous consolidated file, so drift across PRs is
+    # observable instead of silently accumulating
+    consolidated["total_wall_s"] = round(sum(
+        s.get("wall_s", 0.0) for s in consolidated["suites"].values()), 3)
     bench_file = OUT / f"BENCH_{consolidated['date']}.json"
+    prev = sorted(p for p in OUT.glob("BENCH_*.json") if p != bench_file)
+    if prev:
+        try:
+            old = json.loads(prev[-1].read_text())
+            traj = {}
+            for name, suite in consolidated["suites"].items():
+                before = old.get("suites", {}).get(name, {}).get("wall_s")
+                now = suite.get("wall_s")
+                if before and now:
+                    traj[name] = {
+                        "prev_wall_s": before, "wall_s": now,
+                        "delta_pct": round(100.0 * (now - before) / before,
+                                           1)}
+            consolidated["trajectory"] = {"baseline": prev[-1].name,
+                                          "suites": traj}
+        except (ValueError, OSError):
+            pass                       # a corrupt old file never blocks
     bench_file.write_text(json.dumps(consolidated, indent=1))
     print(f"# consolidated -> {bench_file}", file=sys.stderr)
+    for name, t in consolidated.get("trajectory", {}).get("suites",
+                                                          {}).items():
+        print(f"# trajectory {name}: {t['prev_wall_s']}s -> {t['wall_s']}s "
+              f"({t['delta_pct']:+.1f}%)", file=sys.stderr)
     if failures:
         for n, e in failures:
             print(f"# FAILED {n}: {e}", file=sys.stderr)

@@ -1,0 +1,127 @@
+"""Offline observability report: critical-path attribution + Perfetto
+export from a span-tree JSONL dump.
+
+    PYTHONPATH=src python scripts/obs_report.py spans.jsonl
+    PYTHONPATH=src python scripts/obs_report.py spans.jsonl --run <run_id>
+    PYTHONPATH=src python scripts/obs_report.py spans.jsonl --chrome t.json
+    PYTHONPATH=src python scripts/obs_report.py --demo [--chaos]
+
+Input is whatever ``ObsCollector.export_jsonl`` wrote (one finished run
+per line). For each selected run the critical-path makespan breakdown is
+printed (``MakespanReport.render``); ``--chrome`` additionally writes the
+runs as Chrome trace-event JSON — validated against the schema Perfetto
+loads — for ``ui.perfetto.dev`` / ``chrome://tracing``.
+
+``--demo`` runs a small observed pipeline in-process (add ``--chaos`` for
+a seeded fault plan with retries and a requeue) and reports on it; useful
+for a first look at the span taxonomy without instrumenting anything.
+"""
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.obs.attribution import build_report  # noqa: E402
+from repro.core.obs.spans import (  # noqa: E402
+    ObsCollector, chrome_trace, load_jsonl, validate_chrome_trace)
+
+
+def _demo_trees(chaos: bool):
+    """Run one observed streaming pipeline (optionally under a seeded
+    fault plan) and return (collector, [run_id])."""
+    from repro.core import couler
+    from repro.core.caching import CacheStore
+    from repro.core.engines.local import LocalEngine
+    from repro.core.faults import FaultPlan, ReadmissionPolicy
+
+    kw = dict(cache=CacheStore(), enable_speculation=False,
+              retry_backoff_s=0.001, retry_backoff_max_s=0.01)
+    if chaos:
+        kw["fault_plan"] = FaultPlan(seed=1, crash_rate=1.0,
+                                     max_failures_per_site=5)
+        kw["readmission"] = ReadmissionPolicy(base_backoff_s=0.02,
+                                              max_backoff_s=0.1)
+    eng = LocalEngine(**kw)
+    try:
+        c = couler.observe(eng)
+        with couler.workflow("obs-demo") as ir:
+            if chaos:
+                a = couler.run_step(lambda: (time.sleep(0.005), 2)[1],
+                                    step_name="a")
+                b = couler.run_step(lambda x: (time.sleep(0.005), x * 3)[1],
+                                    a, step_name="b")
+                couler.run_step(lambda x: x + 1, b, step_name="c")
+            else:
+                def gen(n=4):
+                    for i in range(n):
+                        time.sleep(0.005)
+                        yield i
+                cur = couler.run_stream(gen, step_name="gen",
+                                        cacheable=False)
+                for i in range(3):
+                    cur = couler.map_stream(
+                        lambda x, _i=i: (time.sleep(0.002), x + 1)[1], cur,
+                        step_name=f"stage{i}", cacheable=False)
+        run = eng.submit(ir, optimize=False)
+        return c, [run.run_id]
+    finally:
+        eng.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("jsonl", nargs="?", default=None,
+                    help="span-tree JSONL file (from export_jsonl)")
+    ap.add_argument("--run", default=None,
+                    help="report only this run id (default: every run)")
+    ap.add_argument("--chrome", metavar="OUT.json", default=None,
+                    help="also write Chrome trace-event JSON for Perfetto")
+    ap.add_argument("--demo", action="store_true",
+                    help="run a small observed pipeline and report on it")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --demo: inject a seeded fault plan")
+    args = ap.parse_args(argv)
+
+    if args.demo:
+        collector, _ = _demo_trees(chaos=args.chaos)
+        trees = collector.trees()
+    elif args.jsonl:
+        trees = load_jsonl(Path(args.jsonl).read_text())
+    else:
+        ap.error("give a JSONL file or --demo")
+        return 2
+
+    if args.run:
+        trees = [t for t in trees if t.run_id == args.run]
+        if not trees:
+            print(f"no finished run {args.run!r} in input", file=sys.stderr)
+            return 1
+    if not trees:
+        print("no finished runs in input", file=sys.stderr)
+        return 1
+
+    for t in trees:
+        print(build_report(t).render())
+        print()
+
+    if args.chrome:
+        trace = chrome_trace(trees)
+        problems = validate_chrome_trace(trace)
+        if problems:
+            for p in problems:
+                print(f"chrome-trace problem: {p}", file=sys.stderr)
+            return 1
+        Path(args.chrome).write_text(json.dumps(trace))
+        print(f"# chrome trace ({len(trace['traceEvents'])} events) "
+              f"-> {args.chrome}  (load at ui.perfetto.dev)",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

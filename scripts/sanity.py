@@ -292,6 +292,107 @@ def chaos_sanity() -> bool:
     return True
 
 
+def obs_sanity() -> bool:
+    """Observability consistency fuzz: random DAGs (half under a seeded
+    fault plan) through an observed engine; the registry counters must
+    reconcile exactly with the derived span trees — per-type event
+    totals, per-status run counts, retry/readmission segment counts —
+    and no builder may leak (open_run_ids drains to empty)."""
+    from repro.core import couler
+    from repro.core.caching import CacheStore
+    from repro.core.engines.local import LocalEngine
+    from repro.core.faults import FaultPlan, ReadmissionPolicy
+    from repro.core.ir import Job, WorkflowIR
+
+    rng = random.Random(7)
+
+    def build(i: int) -> WorkflowIR:
+        wf = WorkflowIR(f"obs-fuzz-{i}")
+        n = rng.randint(2, 5)
+        for j in range(n):
+            wf.add_job(Job(name=f"s{j}", fn=lambda i=i, j=j: i * 10 + j,
+                           cacheable=False, retry_limit=3))
+        for j in range(1, n):
+            for k in range(j):
+                if rng.random() < 0.5:
+                    wf.add_edge(f"s{k}", f"s{j}")
+        return wf
+
+    def engine(chaos: bool) -> LocalEngine:
+        kw = dict(cache=CacheStore(), enable_speculation=False,
+                  check_events=True, retry_backoff_s=0.002,
+                  retry_backoff_max_s=0.02)
+        if chaos:
+            kw["fault_plan"] = FaultPlan(seed=13, crash_rate=0.3,
+                                         worker_loss_rate=0.15,
+                                         max_failures_per_site=4)
+            kw["readmission"] = ReadmissionPolicy(base_backoff_s=0.005,
+                                                  max_backoff_s=0.05)
+        return LocalEngine(**kw)
+
+    try:
+        streams = []
+        trees = []
+        for chaos in (False, True):
+            eng = engine(chaos)
+            try:
+                c = couler.observe(eng)
+                handles = [eng.gateway.submit_nowait(build(i), block=True)
+                           for i in range(8)]
+                runs = [h.result() for h in handles]
+                assert all(r.succeeded() for r in runs)
+                assert c.open_run_ids == [], "span builders leaked"
+                for h, r in zip(handles, runs):
+                    evs = h.events_so_far()
+                    t = c.tree(r.run_id)
+                    assert t is not None and t.status == "Succeeded"
+                    # tree event totals mirror the raw stream exactly
+                    assert t.events_total == len(evs)
+                    by_type = {}
+                    for ev in evs:
+                        by_type[ev.type.name] = by_type.get(ev.type.name,
+                                                            0) + 1
+                    assert t.counts == by_type
+                    for sp in t.steps:
+                        assert sp.end is not None, f"open span {sp.step}"
+                    streams.append(evs)
+                    trees.append(t)
+                # registry totals reconcile with the span trees this
+                # collector derived
+                reg = c.registry
+                these = [c.tree(r.run_id) for r in runs]
+                assert reg.get_value("obs_runs_total",
+                                     status="Succeeded") == len(runs)
+                assert reg.get_value("obs_retries_total") == sum(
+                    len(t.retry_segments) for t in these)
+                for tname in ("STEP_STARTED", "STEP_SUCCEEDED",
+                              "WORKFLOW_DONE", "STEP_RETRY"):
+                    assert reg.get_value("obs_events_total",
+                                         type=tname) == sum(
+                        t.counts.get(tname, 0) for t in these)
+            finally:
+                eng.close()
+        # offline replay into a fresh collector reproduces the trees
+        from repro.core.obs import ObsCollector
+        c2 = ObsCollector()
+        for evs, t in zip(streams, trees):
+            rid = c2.ingest(evs, run_id=t.run_id, tenant=t.tenant)
+            t2 = c2.tree(rid)
+            assert t2.counts == t.counts
+            assert t2.status == t.status
+            assert len(t2.retry_segments) == len(t.retry_segments)
+        assert c2.open_run_ids == []
+    except AssertionError as e:
+        print(f"FAIL obs {e}")
+        traceback.print_exc()
+        return False
+    n_retries = sum(len(t.retry_segments) for t in trees)
+    print(f"OK   obs {len(trees)} runs reconciled "
+          f"({sum(t.events_total for t in trees)} events, "
+          f"{n_retries} retries), no span leaks")
+    return True
+
+
 def workflow_lint_sanity() -> bool:
     """CI lint gate: every example/bench/NL2WF workflow must lint with
     zero errors (scripts/lint_workflows.py has the corpus)."""
@@ -314,6 +415,7 @@ ok = cache_tier_sanity() and ok
 ok = gateway_event_sanity() and ok
 ok = streaming_event_sanity() and ok
 ok = chaos_sanity() and ok
+ok = obs_sanity() and ok
 ok = workflow_lint_sanity() and ok
 for aid in only:
     spec = get_arch(aid)

@@ -388,5 +388,13 @@ async def stream(submitter=None, workflow_ir: Optional[WorkflowIR] = None,
         yield ev
 
 
+def observe(engine, collector=None):
+    """Attach an observability collector to ``engine`` (span trees +
+    ``run.report()`` critical-path breakdowns for every subsequent run).
+    Returns the ``ObsCollector``; see ``repro.core.obs``."""
+    from repro.core import obs
+    return obs.observe(engine, collector)
+
+
 def reset() -> None:
     _local.wf = WorkflowIR("default")

@@ -17,6 +17,7 @@ toward MEM even when their structural reuse value is modest.
 """
 from __future__ import annotations
 
+import logging
 import weakref
 from collections import OrderedDict
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
@@ -128,6 +129,17 @@ class CoulerPolicy(CachePolicy):
         self.alpha, self.beta, self.n_layers = alpha, beta, n_layers
         self.literal_eq4 = literal_eq4
         self._ctxs: "OrderedDict[int, _WfScoringCtx]" = OrderedDict()
+        # rotations that evicted a LIVE workflow's memos — each one means
+        # more than _MAX_CONTEXTS workflows share this policy and Eq. 3/4
+        # will be recomputed from scratch on that workflow's next score
+        self.ctx_rotations_live = 0
+        self._m_rotations = None
+
+    def bind_metrics(self, registry) -> None:
+        """Attach registry instruments (``TieredCacheStore`` calls this):
+        a live-eviction counter plus a scoring-context occupancy gauge."""
+        self._m_rotations = registry.counter("cache_ctx_rotated_live_total")
+        registry.gauge_fn("cache_scoring_ctxs", lambda: len(self._ctxs))
 
     def invalidate(self, wf: Optional[WorkflowIR]) -> None:
         self._ctxs.clear()
@@ -144,7 +156,21 @@ class CoulerPolicy(CachePolicy):
             ctx.recon.clear()                        # Eq. 3 reads w_i
         self._ctxs.move_to_end(key)
         while len(self._ctxs) > self._MAX_CONTEXTS:
-            self._ctxs.popitem(last=False)
+            _, evicted = self._ctxs.popitem(last=False)
+            live = evicted.ref()
+            if live is not None:
+                # the workflow is still alive — its memos will be rebuilt
+                # from scratch next time it scores (O(V+E) per producer
+                # instead of O(1)); sustained rotation is a working-set
+                # smell worth surfacing, not just a silent slowdown
+                self.ctx_rotations_live += 1
+                if self._m_rotations is not None:
+                    self._m_rotations.inc()
+                logging.getLogger(__name__).warning(
+                    "CoulerPolicy: rotated out scoring context for live "
+                    "workflow %r (>%d concurrent workflows share this "
+                    "policy; Eq. 3/4 memos for it will be recomputed)",
+                    getattr(live, "name", "?"), self._MAX_CONTEXTS)
         return ctx
 
     def _reach(self, ctx: _WfScoringCtx, wf: WorkflowIR,

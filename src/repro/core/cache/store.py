@@ -70,6 +70,7 @@ from repro.core.cache.scoring import CachedArtifact, sizeof
 from repro.core.cache.tiers import (CacheTier, TierSpec, mem_spec,
                                     remote_spec, ssd_spec)
 from repro.core.ir import WorkflowIR
+from repro.core.obs.metrics import MetricsRegistry, StatsView
 
 
 class _TierView:
@@ -89,9 +90,14 @@ class _TierView:
 class TieredCacheStore:
     """Multi-tier artifact store; see module docstring for semantics."""
 
+    _STAT_KEYS = ("hits", "misses", "evictions", "admitted", "rejected",
+                  "refreshed", "demotions", "promotions", "promote_passes",
+                  "fetch_s", "score_time_s")
+
     def __init__(self, tiers: Optional[Sequence[CacheTier]] = None,
                  policy: Optional[CachePolicy] = None, name: str = "store",
-                 auto_promote_every: int = 0):
+                 auto_promote_every: int = 0,
+                 registry: Optional[MetricsRegistry] = None):
         import threading
         self.name = name
         self.tiers: List[CacheTier] = (list(tiers) if tiers is not None
@@ -107,10 +113,24 @@ class TieredCacheStore:
         self._shared_uses: Dict[str, int] = {}
         self._insertions = 0
         self._lock = threading.RLock()      # engines offer() from workers
-        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
-                      "admitted": 0, "rejected": 0, "refreshed": 0,
-                      "demotions": 0, "promotions": 0, "promote_passes": 0,
-                      "fetch_s": 0.0, "score_time_s": 0.0}
+        # per-event counters live in a metrics registry (fetch_s /
+        # score_time_s are float counters there too); ``stats`` is a
+        # dict-compatible view so the legacy surface survives unchanged
+        self.registry = registry if registry is not None \
+            else MetricsRegistry("cache")
+        self._m = {k: self.registry.counter(
+                       f"cache_{k}_total" if k not in ("fetch_s",
+                                                       "score_time_s")
+                       else f"cache_{k}", store=self.name)
+                   for k in self._STAT_KEYS}
+        self.registry.gauge_fn(f"cache_used_bytes{{store={self.name}}}",
+                               lambda: self.used_bytes)
+        for t in self.tiers:
+            self.registry.gauge_fn(
+                f"cache_tier_used_bytes{{store={self.name},tier={t.name}}}",
+                (lambda tier: lambda: tier.used_bytes)(t))
+        if hasattr(self.policy, "bind_metrics"):
+            self.policy.bind_metrics(self.registry)
         self._epoch = 0                     # bumped on score-moving changes
         # per-tier lazily invalidated (score, insertion, name) min-heaps
         self._heaps: List[List[Tuple[float, int, str]]] = \
@@ -123,6 +143,10 @@ class TieredCacheStore:
         # per-artifact via CachedArtifact.wf_ref
         self._workflows: "weakref.WeakValueDictionary[int, WorkflowIR]" = \
             weakref.WeakValueDictionary()
+
+    @property
+    def stats(self) -> StatsView:
+        return StatsView(self._m)
 
     # -- legacy surface ----------------------------------------------------
     @property
@@ -153,8 +177,9 @@ class TieredCacheStore:
                 self._epoch += 1
 
     def hit_ratio(self) -> float:
-        tot = self.stats["hits"] + self.stats["misses"]
-        return self.stats["hits"] / tot if tot else 0.0
+        h = self._m["hits"].value
+        tot = h + self._m["misses"].value
+        return h / tot if tot else 0.0
 
     def contains(self, name: str) -> bool:
         return any(name in t.items for t in self.tiers)
@@ -186,8 +211,8 @@ class TieredCacheStore:
                         self._shared_uses.clear()
                     self._shared_uses[name] = \
                         self._shared_uses.get(name, 0) + 1
-                self.stats["hits"] += 1
-                self.stats["fetch_s"] += t.access_time_s(art.bytes)
+                self._m["hits"].inc()
+                self._m["fetch_s"].inc(t.access_time_s(art.bytes))
                 self._epoch += 1            # last_used moved (LRU scores)
                 if self.auto_promote_every:
                     self._hits_since_promote += 1
@@ -195,7 +220,7 @@ class TieredCacheStore:
                         self._hits_since_promote = 0
                         self.promote()
                 return art
-            self.stats["misses"] += 1
+            self._m["misses"].inc()
             return None
 
     def offer(self, name: str, value: Any, compute_time_s: float,
@@ -221,16 +246,16 @@ class TieredCacheStore:
             self._insertions += 1
 
             if not self.policy.admit(art):
-                self.stats["rejected"] += 1
+                self._m["rejected"].inc()
                 return False
             start = next((i for i, t in enumerate(self.tiers) if t.fits(b)),
                          None)
             if start is None:
-                self.stats["rejected"] += 1
+                self._m["rejected"].inc()
                 return False
             placed = self._place(art, start, "admitted")
             if placed is None:
-                self.stats["rejected"] += 1
+                self._m["rejected"].inc()
                 return False
             self._drop_stale(name, keep_idx=placed)
             return True
@@ -269,7 +294,7 @@ class TieredCacheStore:
                 self._sync_workflow_versions()
                 t0 = time.perf_counter()
                 new_score = self.policy.score(art, self._view(idx))
-                self.stats["score_time_s"] += time.perf_counter() - t0
+                self._m["score_time_s"].inc(time.perf_counter() - t0)
             ms = self._min_scored(idx)
             if ms is None:
                 continue               # shared tier drained under us; retry
@@ -291,12 +316,12 @@ class TieredCacheStore:
         down = idx + 1 if idx + 1 < len(self.tiers) else None
         if down is None:
             if tier.remove(name, "evicted") is not None:
-                self.stats["evictions"] += 1
+                self._m["evictions"].inc()
         else:
             victim = tier.remove(name, "demoted")
             if victim is not None and \
                     self._place(victim, down, "demoted") is None:
-                self.stats["evictions"] += 1
+                self._m["evictions"].inc()
         self._epoch += 1
 
     def _try_insert(self, art: CachedArtifact, idx: int, reason: str) -> bool:
@@ -319,13 +344,13 @@ class TieredCacheStore:
         if old is not None:
             # same-key refresh: replace in place — NOT an eviction (and not
             # a second admission), so policy stats stay comparable
-            self.stats["refreshed"] += 1
+            self._m["refreshed"].inc()
         elif reason == "admitted":
-            self.stats["admitted"] += 1
+            self._m["admitted"].inc()
         elif reason == "demoted":
-            self.stats["demotions"] += 1
+            self._m["demotions"].inc()
         elif reason == "promoted":
-            self.stats["promotions"] += 1
+            self._m["promotions"].inc()
         self._epoch += 1
 
     def _drop_stale(self, name: str, keep_idx: int) -> None:
@@ -365,7 +390,7 @@ class TieredCacheStore:
                          else tier.items).values())
             t0 = time.perf_counter()
             scores = self.policy.score_many(arts, self._view(idx))
-            self.stats["score_time_s"] += time.perf_counter() - t0
+            self._m["score_time_s"].inc(time.perf_counter() - t0)
             heap = [(s, a.insertion, a.name) for s, a in zip(scores, arts)]
             heapq.heapify(heap)
             self._heaps[idx] = heap
@@ -385,7 +410,7 @@ class TieredCacheStore:
         moved = {"promoted": 0, "demoted": 0, "copied_up": 0}
         with self._lock:
             self._sync_workflow_versions()
-            self.stats["promote_passes"] += 1
+            self._m["promote_passes"].inc()
             entries: List[Tuple[CachedArtifact, int, float]] = []
             private_names = set()
             for i, t in enumerate(self.tiers):
@@ -404,7 +429,7 @@ class TieredCacheStore:
                     continue
                 scores = self.policy.promotion_scores(arts, self._view(i))
                 entries.extend(zip(arts, [i] * len(arts), scores))
-            self.stats["score_time_s"] += time.perf_counter() - t0
+            self._m["score_time_s"].inc(time.perf_counter() - t0)
 
             # plan capacity: each tier's free space plus whatever this
             # store's ranked PRIVATE entries currently occupy in it (shared
@@ -443,7 +468,7 @@ class TieredCacheStore:
                             and dst.used_bytes + art.bytes
                             <= dst.capacity_bytes):
                         dst.put(art, "promoted")   # copy up, keep replica
-                        self.stats["promotions"] += 1
+                        self._m["promotions"].inc()
                         moved["copied_up"] += 1
                     continue                       # shared replicas never sink
                 if dst.shared:
@@ -454,7 +479,7 @@ class TieredCacheStore:
                     if not ok:
                         continue
                     src.remove(art.name, "demoted")
-                    self.stats["demotions"] += 1
+                    self._m["demotions"].inc()
                     moved["demoted"] += 1
                     continue
                 if dst.used_bytes + art.bytes > dst.capacity_bytes:
@@ -462,7 +487,7 @@ class TieredCacheStore:
                 kind = "promoted" if tgt < cur else "demoted"
                 src.remove(art.name, kind)
                 dst.put(art, kind)
-                self.stats["promotions" if tgt < cur else "demotions"] += 1
+                self._m["promotions" if tgt < cur else "demotions"].inc()
                 moved[kind] += 1
             if any(m for m in moved.values()):
                 self._epoch += 1

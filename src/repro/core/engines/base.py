@@ -61,6 +61,23 @@ class WorkflowRun:
     def succeeded(self) -> bool:
         return self.status == "Succeeded"
 
+    def report(self):
+        """Critical-path makespan breakdown for this run (a
+        ``repro.core.obs.MakespanReport``). Requires the engine to have
+        been observed — ``couler.observe(engine)`` — before the run."""
+        ref = getattr(self, "_obs_collector", None)
+        coll = ref() if ref is not None else None
+        if coll is None:
+            raise RuntimeError(
+                "run was not traced: call couler.observe(engine) before "
+                "submitting, then run.report()")
+        rep = coll.report(self.run_id)
+        if rep is None:
+            raise RuntimeError(
+                f"no span tree for run {self.run_id!r} (rotated out of "
+                "the collector's LRU, or the run never finished)")
+        return rep
+
     def counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
         for r in self.steps.values():

@@ -44,6 +44,7 @@ from repro.core.engines.base import Engine, StepRecord, StepStatus, WorkflowRun
 from repro.core.faults.plan import FaultPlan
 from repro.core.gateway.events import EventType
 from repro.core.ir import WorkflowIR
+from repro.core.obs.metrics import MetricsRegistry, StatsView
 
 
 @dataclass
@@ -128,7 +129,8 @@ class MultiClusterEngine(Engine):
                  caches: Optional[Dict[str, "TieredCacheStore"]] = None,
                  xfer_bandwidth_bytes_s: float = 1.2e8,
                  xfer_latency_s: float = 2e-2,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.clusters = clusters or [
             Cluster("gpu-cluster", cpu=512, mem_bytes=2048 * 2**30, gpu=64),
             Cluster("cpu-cluster", cpu=2048, mem_bytes=8192 * 2**30),
@@ -147,11 +149,46 @@ class MultiClusterEngine(Engine):
         # their ready queues (re-placed elsewhere or parked until recovery)
         self.fault_plan = fault_plan
         self._seq = itertools.count()
-        self.metrics = {"scheduled_jobs": 0, "completed_workflows": 0,
-                        "failed_admission": 0, "makespan_s": 0.0,
-                        "fetch_wait_s": 0.0, "recompute_wait_s": 0.0,
-                        "preemptions": 0, "preempted_jobs": 0,
-                        "cluster_busy_s": {c.name: 0.0 for c in self.clusters}}
+        # scheduler telemetry in registry instruments; ``metrics`` stays a
+        # dict-compatible view (the equivalence suite compares it per-key
+        # against a plain-dict reference, including the nested
+        # ``cluster_busy_s`` map — float accumulation order is identical
+        # because Counter.inc is the same ``+=`` under a lock)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry("cluster")
+        self._m = {
+            "scheduled_jobs":
+                self.registry.counter("cluster_scheduled_jobs_total"),
+            "completed_workflows":
+                self.registry.counter("cluster_completed_workflows_total"),
+            "failed_admission":
+                self.registry.counter("cluster_failed_admission_total"),
+            "makespan_s": self.registry.gauge("cluster_makespan_s"),
+            "fetch_wait_s": self.registry.counter("cluster_fetch_wait_s"),
+            "recompute_wait_s":
+                self.registry.counter("cluster_recompute_wait_s"),
+            "preemptions": self.registry.counter("cluster_preemptions_total"),
+            "preempted_jobs":
+                self.registry.counter("cluster_preempted_jobs_total"),
+        }
+        # pre-created so every cluster reports a (possibly zero) series
+        self._m_busy = {c.name: self.registry.counter("cluster_busy_cpu_s",
+                                                      cluster=c.name)
+                        for c in self.clusters}
+        self._collector = None
+
+    @property
+    def metrics(self) -> StatsView:
+        fields: Dict[str, object] = dict(self._m)
+        fields["cluster_busy_s"] = \
+            lambda: {n: c.value for n, c in self._m_busy.items()}
+        return StatsView(fields)
+
+    def attach_collector(self, collector) -> None:
+        """Span-trace every subsequent ``submit_admitted`` batch: finished
+        handles' event streams are ingested into ``collector`` and each
+        returned run gets a ``report()``-able back-reference."""
+        self._collector = collector
 
     def _quota(self, user: str) -> UserQuota:
         if user not in self.quotas:
@@ -247,10 +284,10 @@ class MultiClusterEngine(Engine):
                         store.offer(key, None, compute_time_s=recompute,
                                     producer=p, nbytes=nbytes)
                 total += fetch
-                self.metrics["fetch_wait_s"] += fetch
+                self._m["fetch_wait_s"].inc(fetch)
             else:
                 total += recompute
-                self.metrics["recompute_wait_s"] += recompute
+                self._m["recompute_wait_s"].inc(recompute)
                 if store is not None:
                     store.offer(key, None, compute_time_s=recompute,
                                 producer=p, nbytes=nbytes)
@@ -363,7 +400,7 @@ class MultiClusterEngine(Engine):
                         continue
                     c = self._pick_cluster(job, st, n, now=now)
                     if c is None:
-                        self.metrics["failed_admission"] += 1
+                        self._m["failed_admission"].inc()
                         cluster_waiters.append((ai, i))
                         continue
                     r = job.resources
@@ -375,7 +412,7 @@ class MultiClusterEngine(Engine):
                     q.used_gpu += r.gpu
                     st.run.steps[n].status = StepStatus.RUNNING
                     st.run.steps[n].start = now
-                    self.metrics["scheduled_jobs"] += 1
+                    self._m["scheduled_jobs"].inc()
                     dur = job.est_time_s
                     if self.caches is not None:
                         dur += self._charge_inputs_s(st, n, c)
@@ -391,7 +428,7 @@ class MultiClusterEngine(Engine):
             now, seq, c, user, st, n = heapq.heappop(events)
             if st is None:                       # chaos marker, not a job
                 if n == "__preempt__":
-                    self.metrics["preemptions"] += 1
+                    self._m["preemptions"].inc()
                     c.dark_until = now + plan.preemption_dark_s
                     # evict everything in flight on the struck cluster:
                     # free its resources, bump attempts, re-ready the job
@@ -414,7 +451,7 @@ class MultiClusterEngine(Engine):
                         rec.attempts += 1
                         rec.error = (f"preempted on {c.name} "
                                      f"at t={now:.3f}")
-                        self.metrics["preempted_jobs"] += 1
+                        self._m["preempted_jobs"].inc()
                         heapq.heappush(vst.ready, vst.jidx[vn])
                         arm(vst)
                         h = handles.get(vst.wf.name) if handles else None
@@ -460,7 +497,7 @@ class MultiClusterEngine(Engine):
             # caches keep the exact legacy expression (equivalence suite)
             busy = (job.est_time_s if self.caches is None
                     else now - rec.start)
-            self.metrics["cluster_busy_s"][c.name] += busy * r.cpu
+            self._m_busy[c.name].inc(busy * r.cpu)
             rec.status = StepStatus.SUCCEEDED
             rec.end = now
             last_t = now
@@ -482,7 +519,7 @@ class MultiClusterEngine(Engine):
             if st.remaining == 0:
                 st.run.status = "Succeeded"
                 st.run.wall_time_s = now
-                self.metrics["completed_workflows"] += 1
+                self._m["completed_workflows"].inc()
                 done_local += 1
             if newly_ready:
                 arm(st)
@@ -499,7 +536,7 @@ class MultiClusterEngine(Engine):
                 arm(stw)
             launch_pass()
         # the last *completion* time (recovery markers may outlive the work)
-        self.metrics["makespan_s"] = last_t
+        self._m["makespan_s"].set(last_t)
         return runs
 
     def submit(self, wf: WorkflowIR, optimize: bool = True, user: str = "u0",
@@ -540,4 +577,14 @@ class MultiClusterEngine(Engine):
                 it.handle.run = run
                 it.handle._publish(EventType.WORKFLOW_DONE, status=run.status)
                 it.handle._finish(run)
+        c = self._collector
+        if c is not None:
+            import weakref
+            for it in items:
+                if it.handle is None:
+                    continue
+                run = runs[it.wf.name]
+                c.ingest(it.handle.events_so_far(), wf=it.wf,
+                         run_id=run.run_id, tenant=it.tenant)
+                run._obs_collector = weakref.ref(c)
         return runs

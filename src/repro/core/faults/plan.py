@@ -39,6 +39,7 @@ from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, Optional, Tuple
 
 from repro.core.engines.base import TransientError
+from repro.core.obs.metrics import MetricsRegistry, StatsView
 
 
 class InjectedFault(Exception):
@@ -104,13 +105,29 @@ class ChaosInjector:
     ``max_failures_per_site`` cap always converges.
     """
 
-    def __init__(self, plan: FaultPlan):
+    def __init__(self, plan: FaultPlan,
+                 registry: Optional[MetricsRegistry] = None):
         self.plan = plan
         self._lock = threading.Lock()
         self._consults: Dict[Tuple[str, str], int] = {}
         self._injected: Dict[Tuple[str, str], int] = {}
-        self.stats = {"consults": 0, "crash": 0, "crash_permanent": 0,
-                      "worker_lost": 0, "mid_step_kill": 0}
+        self.registry = registry if registry is not None \
+            else MetricsRegistry("chaos")
+        self._m = {
+            "consults": self.registry.counter("chaos_consults_total"),
+            "crash": self.registry.counter("chaos_injected_total",
+                                           kind="crash"),
+            "crash_permanent": self.registry.counter(
+                "chaos_injected_total", kind="crash_permanent"),
+            "worker_lost": self.registry.counter("chaos_injected_total",
+                                                 kind="worker_lost"),
+            "mid_step_kill": self.registry.counter(
+                "chaos_mid_step_kills_total"),
+        }
+
+    @property
+    def stats(self) -> StatsView:
+        return StatsView(self._m)
 
     def begin_attempt(self, workflow: str, step: str,
                       checkpointed: bool = False
@@ -128,7 +145,7 @@ class ChaosInjector:
         with self._lock:
             k = self._consults.get(site, 0)
             self._consults[site] = k + 1
-            self.stats["consults"] += 1
+            self._m["consults"].inc()
             if plan.targets is not None and step not in plan.targets \
                     and f"{workflow}/{step}" not in plan.targets:
                 return None, None
@@ -145,7 +162,7 @@ class ChaosInjector:
             else:
                 return None, None
             self._injected[site] = self._injected.get(site, 0) + 1
-            self.stats[kind] += 1
+            self._m[kind].inc()
             tag = f"{workflow}/{step} consult {k}"
             if kind == "crash":
                 return InjectedCrash(f"injected transient crash: {tag}"), None
@@ -154,7 +171,7 @@ class ChaosInjector:
                     f"injected permanent crash: {tag}"), None
             exc = WorkerLost(f"injected worker loss: {tag}")
             if checkpointed:
-                self.stats["mid_step_kill"] += 1
+                self._m["mid_step_kill"].inc()
                 at = int(plan._u("kill-iter", workflow, step, str(k))
                          * max(1, plan.mid_step_kill_window))
                 return exc, at

@@ -25,6 +25,7 @@ from typing import Callable, Deque, Dict, List, Optional, TYPE_CHECKING
 
 from repro.core.gateway.events import EventType
 from repro.core.ir import WorkflowIR
+from repro.core.obs.metrics import MetricsRegistry, StatsView
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.core.gateway.run import AsyncWorkflowRun
@@ -64,7 +65,8 @@ class AdmissionQueue:
     def __init__(self, max_depth_per_tenant: int = 1024,
                  max_total: int = 8192,
                  weights: Optional[Dict[str, int]] = None,
-                 default_weight: int = 1):
+                 default_weight: int = 1,
+                 registry: Optional[MetricsRegistry] = None):
         self.max_depth_per_tenant = max_depth_per_tenant
         self.max_total = max_total
         self.weights = dict(weights or {})
@@ -75,7 +77,23 @@ class AdmissionQueue:
         self._credit = 0                   # remaining serves for ring[0]
         self._total = 0
         self._listeners: List[Callable[[], None]] = []
-        self.stats = {"offered": 0, "shed": 0, "popped": 0}
+        # aggregate counters + per-tenant shed/depth series (the gateway
+        # passes its registry in so everything lands in one snapshot);
+        # the legacy ``stats`` dict is a read view over the aggregates
+        self.registry = registry if registry is not None \
+            else MetricsRegistry("admission")
+        self._m = {k: self.registry.counter(f"admission_{k}_total")
+                   for k in ("offered", "shed", "popped")}
+        self._m_depth = self.registry.gauge("admission_depth")
+        self.registry.gauge_fn("admission_tenants", lambda: len(self._ring))
+
+    @property
+    def stats(self) -> StatsView:
+        return StatsView(self._m)
+
+    def _tenant_shed(self, tenant: str) -> None:
+        self._m["shed"].inc()
+        self.registry.counter("admission_shed_total", tenant=tenant).inc()
 
     # -- producer side -----------------------------------------------------
     def add_listener(self, cb: Callable[[], None]) -> None:
@@ -96,17 +114,17 @@ class AdmissionQueue:
                         and self._total < self.max_total):
                     break
                 if not block:
-                    self.stats["shed"] += 1
+                    self._tenant_shed(item.tenant)
                     raise QueueFull(item.tenant, depth,
                                     self.max_depth_per_tenant)
                 remaining = (None if deadline is None
                              else deadline - time.monotonic())
                 if remaining is not None and remaining <= 0:
-                    self.stats["shed"] += 1
+                    self._tenant_shed(item.tenant)
                     raise QueueFull(item.tenant, depth,
                                     self.max_depth_per_tenant)
                 if not self._cv.wait(remaining):
-                    self.stats["shed"] += 1
+                    self._tenant_shed(item.tenant)
                     raise QueueFull(item.tenant, depth,
                                     self.max_depth_per_tenant)
             if item.handle is not None and not item.readmit_count:
@@ -120,7 +138,12 @@ class AdmissionQueue:
                 self._ring.append(item.tenant)
             self._queues[item.tenant].append(item)
             self._total += 1
-            self.stats["offered"] += 1
+            self._m["offered"].inc()
+            self.registry.counter("admission_offered_total",
+                                  tenant=item.tenant).inc()
+            self._m_depth.inc()
+            self.registry.gauge("admission_depth",
+                                tenant=item.tenant).inc()
             listeners = list(self._listeners)
         for cb in listeners:
             cb()
@@ -169,7 +192,9 @@ class AdmissionQueue:
                 self._credit = 0
             elif self._credit <= 0:         # served its weight: next tenant
                 self._ring.rotate(-1)
-            self.stats["popped"] += 1
+            self._m["popped"].inc()
+            self._m_depth.dec()
+            self.registry.gauge("admission_depth", tenant=t).dec()
             self._cv.notify_all()           # space freed: wake blocked offers
             return item
         return None

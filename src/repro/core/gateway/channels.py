@@ -83,7 +83,12 @@ class ArtifactChannel:
         self._cursors: Dict[int, int] = {}        # reader id -> cursor
         self._rid = itertools.count()
         self._first_fired = False
-        self.stats = {"puts": 0, "replayed": 0, "rewinds": 0, "max_lead": 0}
+        self.stats = {"puts": 0, "replayed": 0, "rewinds": 0, "max_lead": 0,
+                      # backpressure accounting: how often a put blocked
+                      # on a slow consumer, and for how long in total —
+                      # the gateway folds these into its metrics registry
+                      # and the producer span's stream-stall segment
+                      "stalls": 0, "stall_s": 0.0}
 
     # -- consumer registration ---------------------------------------------
     def expect_consumer(self, name: str) -> None:
@@ -125,6 +130,7 @@ class ArtifactChannel:
         with self._cv:
             deadline = (time.monotonic() + self.stall_timeout_s
                         if self.stall_timeout_s else None)
+            blocked_at = None
             while True:
                 if self._cancelled:
                     raise StreamCancelled(self.artifact)
@@ -141,7 +147,12 @@ class ArtifactChannel:
                         f">{self.stall_timeout_s}s at lead "
                         f"{len(self._chunks) - self._min_cursor_locked()} "
                         f"(is max_inflight_steps >= the streaming depth?)")
+                if blocked_at is None:
+                    blocked_at = time.monotonic()
+                    self.stats["stalls"] += 1
                 self._cv.wait(remaining)
+            if blocked_at is not None:
+                self.stats["stall_s"] += time.monotonic() - blocked_at
             idx = len(self._chunks)
             self._chunks.append(chunk)
             self.stats["puts"] += 1

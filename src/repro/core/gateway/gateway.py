@@ -52,6 +52,7 @@ import asyncio
 import concurrent.futures as cf
 import threading
 import time
+import weakref
 from typing import Dict, List, Optional, Set
 
 from repro.core.autosplit import schedule_parts, split_workflow
@@ -62,6 +63,7 @@ from repro.core.gateway.channels import (ArtifactChannel, StepContext,
 from repro.core.gateway.events import EventType
 from repro.core.gateway.run import AsyncWorkflowRun
 from repro.core.ir import WorkflowIR
+from repro.core.obs.metrics import MetricsRegistry, StatsView
 
 _EVENT_FOR_STATUS = {
     StepStatus.SUCCEEDED: EventType.STEP_SUCCEEDED,
@@ -80,7 +82,9 @@ class WorkflowGateway:
                  admission: Optional[AdmissionQueue] = None,
                  promote_interval_s: float = 0.25,
                  check_events: bool = False,
-                 readmission=None):
+                 readmission=None,
+                 registry: Optional[MetricsRegistry] = None,
+                 collector=None):
         self.engine = engine
         # sanitizer mode: attach a TraceChecker to every run's publish
         # path so an invariant breach raises at the offending event
@@ -96,13 +100,35 @@ class WorkflowGateway:
                                    if max_inflight_steps
                                    else 2 * self.max_workers)
         self.max_inflight_workflows = max_inflight_workflows
+        # one registry per gateway; a default admission queue shares it so
+        # per-tenant depth/shed series land next to the gateway's own
+        self.registry = registry if registry is not None else \
+            MetricsRegistry("gateway")
         self.admission = admission if admission is not None else \
-            AdmissionQueue()
+            AdmissionQueue(registry=self.registry)
+        # span collector (couler.observe / attach_collector): when set,
+        # every submitted run is registered and observed
+        self.collector = collector
         self.promote_interval_s = promote_interval_s
-        self.stats = {"submitted": 0, "completed": 0, "failed": 0,
-                      "cancelled": 0, "readmitted": 0,
-                      "peak_inflight_steps": 0}
-        self._inflight_steps = 0
+        m = self.registry
+        # workflow outcome counters — all increments go through the
+        # thread-safe instruments (the old dict was mutated from the loop
+        # thread AND worker threads without a lock); the legacy
+        # ``gateway.stats`` mapping survives as a read view below
+        self._m_wf = {
+            "submitted": m.counter("gateway_workflows_submitted_total"),
+            "completed": m.counter("gateway_workflows_completed_total"),
+            "failed": m.counter("gateway_workflows_failed_total"),
+            "cancelled": m.counter("gateway_workflows_cancelled_total"),
+            "readmitted": m.counter("gateway_workflows_readmitted_total"),
+        }
+        self._m_inflight = m.gauge("gateway_inflight_steps")
+        self._m_peak = m.gauge("gateway_peak_inflight_steps")
+        self._m_chunks = m.counter("gateway_stream_chunks_total")
+        self._m_replayed = m.counter("gateway_stream_chunks_replayed_total")
+        self._m_rewinds = m.counter("gateway_stream_rewinds_total")
+        self._m_stalls = m.counter("gateway_stream_backpressure_stalls_total")
+        self._m_stall_s = m.counter("gateway_stream_backpressure_stall_s")
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
         self._pool: Optional[cf.ThreadPoolExecutor] = None
@@ -116,6 +142,18 @@ class WorkflowGateway:
         self._started = threading.Event()
         self._closed = False
         self.admission.add_listener(self._on_offer)
+
+    @property
+    def stats(self) -> StatsView:
+        """Legacy dict-compatible view over the registry instruments."""
+        fields = dict(self._m_wf)
+        fields["peak_inflight_steps"] = self._m_peak
+        return StatsView(fields)
+
+    def attach_collector(self, collector) -> None:
+        """Attach an ``ObsCollector`` (``couler.observe``): every run
+        submitted from now on is span-traced and ``run.report()`` works."""
+        self.collector = collector
 
     # -- lifecycle ---------------------------------------------------------
     def ensure_started(self) -> None:
@@ -221,7 +259,15 @@ class WorkflowGateway:
         handle = AsyncWorkflowRun(wf.name, run=run, tenant=tenant)
         if self.check_events:
             from repro.core.analysis import TraceChecker
-            handle._observer = TraceChecker(wf=wf).observe
+            handle.add_observer(TraceChecker(wf=wf).observe)
+        if self.collector is not None:
+            # register before the ADMITTED publish inside admission.offer
+            # so the span tree sees the full stream; the weakref on the
+            # run lets run.report() find its tree without pinning the
+            # collector
+            self.collector.register_run(run.run_id, wf=wf, tenant=tenant)
+            handle.add_observer(self.collector.observe)
+            run._obs_collector = weakref.ref(self.collector)
         item = AdmittedItem(wf=wf, tenant=tenant, priority=priority,
                             optimize=optimize, resume=resume, handle=handle)
         self.admission.offer(item, block=block)
@@ -262,12 +308,12 @@ class WorkflowGateway:
         handle = item.handle
         run = handle.run
         eng = self.engine
-        self.stats["submitted"] += 1
+        self._m_wf["submitted"].inc()
         loop = asyncio.get_running_loop()
         try:
             if handle.cancel_requested:       # cancelled while queued
                 run.status = "Cancelled"
-                self.stats["cancelled"] += 1
+                self._m_wf["cancelled"].inc()
                 handle._publish(EventType.WORKFLOW_DONE, status=run.status)
                 handle._finish(run)
                 return
@@ -298,15 +344,15 @@ class WorkflowGateway:
                     await loop.run_in_executor(self._pool, run.persist)
                     return          # handle finishes on a later round trip
                 run.status = "Failed"
-                self.stats["failed"] += 1
+                self._m_wf["failed"].inc()
             elif handle.cancel_requested and any(
                     r.status == StepStatus.PENDING
                     for r in run.steps.values()):
                 run.status = "Cancelled"
-                self.stats["cancelled"] += 1
+                self._m_wf["cancelled"].inc()
             else:
                 run.status = "Succeeded"
-                self.stats["completed"] += 1
+                self._m_wf["completed"].inc()
             await loop.run_in_executor(self._pool, run.persist)
             handle._publish(EventType.WORKFLOW_DONE, status=run.status)
             handle._finish(run)
@@ -317,7 +363,7 @@ class WorkflowGateway:
             raise
         except Exception as e:  # noqa: BLE001 — internal error, not a step
             run.status = "Failed"
-            self.stats["failed"] += 1
+            self._m_wf["failed"].inc()
             handle._publish(EventType.WORKFLOW_DONE, status="Failed",
                             error=f"{type(e).__name__}: {e}")
             handle._fail(e)
@@ -344,7 +390,7 @@ class WorkflowGateway:
         item.readmit_count += 1
         item.resume = True              # keep the satisfied frontier
         item.priority = pol.aged_priority(item.priority)
-        self.stats["readmitted"] += 1
+        self._m_wf["readmitted"].inc()
         handle._publish(EventType.WORKFLOW_REQUEUED,
                         attempt=item.readmit_count,
                         error=f"steps failed: {', '.join(failed)}"
@@ -367,7 +413,7 @@ class WorkflowGateway:
             raise
         if handle.cancel_requested:
             run.status = "Cancelled"
-            self.stats["cancelled"] += 1
+            self._m_wf["cancelled"].inc()
             handle._publish(EventType.WORKFLOW_DONE, status="Cancelled")
             handle._finish(run)
             return
@@ -554,14 +600,42 @@ class WorkflowGateway:
             spawn(n)
         if state["outstanding"]:
             await part_done
+        if channels:
+            self._fold_channel_stats(channels, run)
         return not state["failed"]
 
+    def _fold_channel_stats(self, channels: Dict[str, ArtifactChannel],
+                            run: WorkflowRun) -> None:
+        """Part teardown: aggregate each channel's chunk/backpressure
+        counters into the registry and annotate the producer's span —
+        producer stall time is measured inside ``put`` and cannot be
+        derived from the event stream alone."""
+        for ch in channels.values():
+            st = ch.stats
+            self._m_chunks.inc(st["puts"])
+            self._m_replayed.inc(st["replayed"])
+            self._m_rewinds.inc(st["rewinds"])
+            self._m_stalls.inc(st["stalls"])
+            self._m_stall_s.inc(st["stall_s"])
+            if self.collector is not None:
+                self.collector.annotate_step(
+                    run.run_id, ch.producer,
+                    stream_stall_s=st["stall_s"],
+                    stream_chunks=st["puts"],
+                    stream_stalls=st["stalls"],
+                    stream_max_lead=st["max_lead"])
+
     def _note_inflight(self, delta: int) -> None:
-        # loop-thread only (exec_one and the release callback both run on
-        # the gateway loop), so no locking
-        self._inflight_steps += delta
-        if self._inflight_steps > self.stats["peak_inflight_steps"]:
-            self.stats["peak_inflight_steps"] = self._inflight_steps
+        # thread-safe now (registry gauges): speculation reserves slots
+        # from worker threads, the loop thread drives exec_one — the old
+        # dict high-water update could lose peaks across those contexts
+        self._m_peak.set_max(self._m_inflight.add(delta))
+
+    @property
+    def _inflight_steps(self) -> int:
+        """Live in-flight step count (reads the registry gauge; kept as an
+        attribute-shaped view for pre-registry call sites and tests)."""
+        return int(self._m_inflight.value)
 
     # -- speculation slot accounting (thread-safe) -------------------------
     def try_reserve_step_slot(self, timeout: float = 2.0) -> bool:

@@ -48,9 +48,17 @@ class AsyncWorkflowRun:
         self._cancel = threading.Event()
         self._cancel_cbs: List[Callable[[], None]] = []
         self._seq = itertools.count()
-        # sanitizer hook (gateway check_events=True): called under the
-        # publish lock so the checker sees events in seq order
-        self._observer: Optional[Callable[[WorkflowEvent], object]] = None
+        # synchronous observers (TraceChecker sanitizer, ObsCollector):
+        # called under the publish lock so each sees events in seq order
+        self._observers: List[Callable[[WorkflowEvent], object]] = []
+
+    def add_observer(self, cb: Callable[[WorkflowEvent], object]) -> None:
+        """Register a synchronous per-event hook. Called under the publish
+        lock in registration order — observers must be fast and must not
+        publish; an observer raising (the TraceChecker sanitizer does, by
+        design) propagates out of the offending ``_publish``."""
+        with self._lock:
+            self._observers.append(cb)
 
     # -- awaiting ----------------------------------------------------------
     def __await__(self):
@@ -160,10 +168,11 @@ class AsyncWorkflowRun:
                     dead.append(sub)
             for sub in dead:
                 self._subs.remove(sub)
-            if self._observer is not None:
-                # raises TraceViolation at the offending publish; the
-                # lock is released by the with-statement on the way out
-                self._observer(ev)
+            for observer in self._observers:
+                # a sanitizer raises TraceViolation at the offending
+                # publish; the lock is released by the with-statement on
+                # the way out
+                observer(ev)
         return ev
 
     def _finish(self, run: WorkflowRun) -> None:

@@ -1,0 +1,77 @@
+"""Unified observability fabric: spans, metrics, critical-path attribution.
+
+Zero-dependency instrumentation substrate for the workflow stack
+(the measurement layer behind the paper's production claims — +15%
+utilization / +17% completion rate are only observable if the system can
+say where workflow time goes). Three pillars:
+
+* ``metrics`` — thread-safe ``MetricsRegistry`` (counters / gauges /
+  fixed-bucket histograms). Every component ``stats`` dict
+  (``WorkflowGateway``, ``AdmissionQueue``, ``TieredCacheStore``,
+  ``ChaosInjector``, ``MultiClusterEngine``) is now a compatibility view
+  over registry instruments; stable metric names are catalogued in
+  ``docs/observability.md``.
+* ``spans`` — ``ObsCollector`` derives a span tree per run from the
+  gateway's typed event stream: workflow span → step spans with
+  queue-wait / cache-fetch / compute / retry / readmission-backoff /
+  stream-stall segments, annotated with ``STEP_RETRY`` / ``WORKER_LOST``
+  / ``CLUSTER_PREEMPTED`` / ``WORKFLOW_REQUEUED`` causes. Exports JSONL
+  and Chrome trace-event JSON (Perfetto-loadable).
+* ``attribution`` — critical-path analyzer turning a finished tree into
+  a ``MakespanReport`` ("62% compute on train, 21% queue wait, ...")
+  whose segments partition the makespan exactly.
+
+Entry points: ``couler.observe(engine)`` attaches a collector to an
+engine (every subsequent run is traced; ``run.report()`` then renders the
+breakdown), and ``scripts/obs_report.py`` is the offline CLI over JSONL
+exports.
+"""
+from repro.core.obs.metrics import (Counter, Gauge, Histogram,
+                                    MetricsRegistry, StatsView)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
+    "ObsCollector", "Segment", "SpanTree", "StepSpan", "chrome_trace",
+    "load_jsonl", "validate_chrome_trace",
+    "MakespanReport", "build_report", "critical_path", "observe",
+]
+
+# spans/attribution import the gateway event taxonomy, while the gateway
+# stack imports obs.metrics — loading those pillars lazily (PEP 562) keeps
+# ``from repro.core.obs.metrics import ...`` cycle-free for every entry
+# point into the package graph
+_LAZY = {
+    "ObsCollector": "spans", "Segment": "spans", "SpanTree": "spans",
+    "StepSpan": "spans", "chrome_trace": "spans", "load_jsonl": "spans",
+    "validate_chrome_trace": "spans",
+    "MakespanReport": "attribution", "build_report": "attribution",
+    "critical_path": "attribution",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+
+
+def observe(engine, collector=None):
+    """Attach an ``ObsCollector`` to ``engine`` so every subsequent run
+    gets a span tree and ``run.report()`` works. Gateway-native engines
+    (``LocalEngine``) trace at full step granularity; ``MultiClusterEngine``
+    ingests the coarse admitted-batch streams via ``attach_collector``.
+    Returns the collector (pass an existing one to share it)."""
+    from repro.core.obs.spans import ObsCollector
+    c = collector or ObsCollector()
+    gw = getattr(engine, "gateway", None)
+    if gw is not None and hasattr(gw, "attach_collector"):
+        gw.attach_collector(c)
+    elif hasattr(engine, "attach_collector"):
+        engine.attach_collector(c)
+    else:
+        raise TypeError(
+            f"engine {type(engine).__name__} has no gateway or "
+            "attach_collector — nothing to observe")
+    return c

@@ -1,0 +1,354 @@
+"""Observability fabric (repro.core.obs): thread-safe metrics registry,
+span derivation from the gateway event stream, critical-path makespan
+attribution, and the Chrome-trace / JSONL exports.
+
+Pins the PR's contracts: no lost counter updates under the step pool's
+concurrency (the old ``stats[k] += 1`` dicts raced), dict-compatible
+``StatsView`` facades over every legacy ``stats`` surface, ``run.report()``
+breakdowns whose segments partition the makespan exactly and reconcile
+with measured wall-clock on a streaming pipeline, and a live-context
+rotation warning from ``CoulerPolicy``'s scoring-memo LRU.
+"""
+import concurrent.futures as cf
+import json
+import logging
+import time
+
+import pytest
+
+from repro.core import couler
+from repro.core.cache.policies import CoulerPolicy
+from repro.core.cache.store import TieredCacheStore
+from repro.core.engines.cluster import MultiClusterEngine
+from repro.core.engines.local import LocalEngine
+from repro.core.gateway import AdmissionQueue, AdmittedItem
+from repro.core.obs import (MetricsRegistry, ObsCollector, StatsView,
+                            build_report, chrome_trace, load_jsonl,
+                            validate_chrome_trace)
+from repro.core.obs.metrics import Counter, Gauge
+
+
+def _engine(**kw):
+    kw.setdefault("enable_speculation", False)
+    kw.setdefault("promote_interval_s", 0.0)
+    kw.setdefault("check_events", True)
+    return LocalEngine(**kw)
+
+
+def _chain(name, sleep=0.0):
+    with couler.workflow(name) as ir:
+        a = couler.run_step(lambda: (time.sleep(sleep), 2)[1], step_name="a")
+        b = couler.run_step(lambda x: (time.sleep(sleep), x * 3)[1], a,
+                            step_name="b")
+        couler.run_step(lambda x: x + 1, b, step_name="c")
+    return ir
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_identity_and_label_series():
+    reg = MetricsRegistry()
+    c1 = reg.counter("x_total", tenant="a")
+    assert reg.counter("x_total", tenant="a") is c1
+    c2 = reg.counter("x_total", tenant="b")
+    assert c2 is not c1
+    c1.inc(3)
+    c2.inc()
+    snap = reg.snapshot()
+    assert snap["x_total{tenant=a}"] == 3
+    assert snap["x_total{tenant=b}"] == 1
+    assert reg.get_value("x_total", tenant="a") == 3
+    assert reg.get_value("never_created") == 0
+    with pytest.raises(TypeError):
+        reg.gauge("x_total", tenant="a")     # name/type collision
+
+
+def test_histogram_buckets_and_quantile():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.05, 0.5, 5.0):
+        h.observe(v)
+    v = h.value
+    assert v["count"] == 5 and v["sum"] == pytest.approx(5.605)
+    assert v["buckets"] == {"0.01": 1, "0.1": 3, "1.0": 4, "+Inf": 5}
+    assert h.quantile(0.5) == 0.1
+    assert h.quantile(1.0) == 1.0            # +Inf reports largest finite
+
+
+def test_gauge_fn_sampled_at_snapshot():
+    reg = MetricsRegistry()
+    box = {"v": 1}
+    reg.gauge_fn("box_depth", lambda: box["v"])
+    assert reg.snapshot()["box_depth"] == 1
+    box["v"] = 7
+    assert reg.snapshot()["box_depth"] == 7
+
+
+def test_stats_view_is_dict_compatible():
+    reg = MetricsRegistry()
+    c = reg.counter("n_total")
+    c.inc(2)
+    view = StatsView({"n": c, "derived": lambda: 10})
+    assert view["n"] == 2 and view["derived"] == 10
+    assert view == {"n": 2, "derived": 10}
+    assert dict(view.items()) == {"n": 2, "derived": 10}
+    assert set(view) == {"n", "derived"} and len(view) == 2
+    assert view.get("missing", 5) == 5 and "n" in view
+    view["n"] = 9                            # legacy hard-set path
+    assert c.value == 9
+    with pytest.raises(TypeError):
+        view["derived"] = 1                  # derived fields are read-only
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: no lost updates under the step pool's concurrency
+# ---------------------------------------------------------------------------
+
+def test_counter_hammer_no_lost_updates():
+    reg = MetricsRegistry()
+    c = reg.counter("hammer_total")
+    g = reg.gauge("hammer_peak")
+    n_threads, per = 8, 5000
+
+    def work(_):
+        for i in range(per):
+            c.inc()
+            g.set_max(i)
+
+    with cf.ThreadPoolExecutor(n_threads) as ex:
+        list(ex.map(work, range(n_threads)))
+    assert c.value == n_threads * per        # the racing dict lost ~% here
+    assert g.value == per - 1
+
+
+def test_gateway_stats_consistent_under_concurrent_submission():
+    eng = _engine(max_workers=8)
+    try:
+        n = 24
+        wfs = [_chain(f"conc{i}") for i in range(n)]
+        with cf.ThreadPoolExecutor(8) as ex:
+            runs = list(ex.map(
+                lambda wf: eng.submit(wf, optimize=False), wfs))
+        assert all(r.succeeded() for r in runs)
+        gw = eng.gateway
+        assert gw.stats["submitted"] == n
+        assert gw.stats["completed"] == n
+        assert gw.stats["failed"] == 0
+        assert gw.registry.get_value("gateway_inflight_steps") == 0
+        assert gw.stats["peak_inflight_steps"] >= 1
+    finally:
+        eng.close()
+
+
+def test_admission_per_tenant_shed_series():
+    q = AdmissionQueue(max_depth_per_tenant=2, max_total=100)
+    wf = _chain("shed")
+    for _ in range(2):
+        q.offer(AdmittedItem(wf=wf, tenant="t0"))
+    from repro.core.gateway.admission import QueueFull
+    with pytest.raises(QueueFull):
+        q.offer(AdmittedItem(wf=wf, tenant="t0"), block=False)
+    q.offer(AdmittedItem(wf=wf, tenant="t1"))
+    assert q.stats["offered"] == 3 and q.stats["shed"] == 1
+    assert q.registry.get_value("admission_shed_total", tenant="t0") == 1
+    assert q.registry.get_value("admission_offered_total", tenant="t1") == 1
+    assert q.registry.get_value("admission_depth", tenant="t0") == 2
+    q.drain()
+    assert q.stats["popped"] == 3
+    assert q.registry.get_value("admission_depth", tenant="t0") == 0
+
+
+def test_cache_store_stats_via_registry():
+    store = TieredCacheStore()
+    store.offer("a", b"x" * 64, 1.0, "p")
+    assert store.get("a") is not None
+    assert store.get("zz") is None
+    assert store.stats["admitted"] == 1
+    assert store.stats["hits"] == 1 and store.stats["misses"] == 1
+    assert store.hit_ratio() == 0.5
+    snap = store.registry.snapshot()
+    assert snap["cache_hits_total{store=store}"] == 1
+    assert "cache_used_bytes{store=store}" in snap
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: live scoring-context rotation warning
+# ---------------------------------------------------------------------------
+
+def test_policy_live_ctx_rotation_warns_and_counts(caplog):
+    pol = CoulerPolicy()
+    reg = MetricsRegistry()
+    pol.bind_metrics(reg)
+    wfs = [_chain(f"rot{i}") for i in range(pol._MAX_CONTEXTS + 1)]
+    with caplog.at_level(logging.WARNING, "repro.core.cache.policies"):
+        for wf in wfs:                        # all live: 17th evicts the 1st
+            pol._ctx_for(wf)
+    assert pol.ctx_rotations_live == 1
+    assert reg.get_value("cache_ctx_rotated_live_total") == 1
+    assert any("rotated out scoring context" in r.message
+               for r in caplog.records)
+    assert reg.snapshot()["cache_scoring_ctxs"] == pol._MAX_CONTEXTS
+    # dead workflows rotate silently
+    caplog.clear()
+    pol2 = CoulerPolicy()
+    pol2.bind_metrics(reg)
+    for i in range(pol2._MAX_CONTEXTS + 4):
+        pol2._ctx_for(_chain(f"dead{i}"))     # nothing else holds a ref
+    assert pol2.ctx_rotations_live == 0
+
+
+# ---------------------------------------------------------------------------
+# span derivation + attribution
+# ---------------------------------------------------------------------------
+
+def test_span_tree_and_report_basics():
+    eng = _engine()
+    try:
+        c = couler.observe(eng)
+        run = eng.submit(_chain("spans", sleep=0.01), optimize=False)
+        assert run.succeeded()
+        tree = c.tree(run.run_id)
+        assert tree is not None and tree.status == "Succeeded"
+        assert {s.step for s in tree.steps} == {"a", "b", "c"}
+        assert c.open_run_ids == []           # no leaked builders
+        for sp in tree.steps:
+            assert sp.end is not None and sp.end >= sp.start
+            assert sp.segments and all(seg.dur >= 0 for seg in sp.segments)
+        # b depends on a -> it waited for a to finish
+        b = next(s for s in tree.steps if s.step == "b")
+        assert b.segments[0].kind == "queue-wait"
+        rep = run.report()
+        assert rep.attributed_s == pytest.approx(rep.makespan_s, abs=1e-9)
+        assert rep.critical_path == ["a", "b", "c"]
+        assert rep.totals.get("compute", 0) > 0
+        assert "compute" in rep.render()
+    finally:
+        eng.close()
+
+
+def test_report_requires_observe():
+    eng = _engine()
+    try:
+        run = eng.submit(_chain("unobserved"), optimize=False)
+        with pytest.raises(RuntimeError, match="couler.observe"):
+            run.report()
+    finally:
+        eng.close()
+
+
+def test_streaming_pipeline_report_reconciles_with_wall_clock():
+    # the acceptance pipeline: 8 stages (p + m1..m7), chunked streaming;
+    # the attributed makespan must reconcile with measured wall-clock ±5%
+    def gen():
+        for i in range(6):
+            time.sleep(0.01)
+            yield i
+    with couler.workflow("stream8") as ir:
+        cur = couler.run_stream(gen, step_name="p", cacheable=False)
+        for k in range(1, 8):
+            cur = couler.map_stream(
+                lambda ch, _k=k: (time.sleep(0.004), ch + _k)[1], cur,
+                step_name=f"m{k}", cacheable=False)
+    eng = _engine(max_inflight_steps=8)
+    try:
+        c = couler.observe(eng)
+        t0 = time.time()
+        run = eng.submit(ir, optimize=False)
+        wall = time.time() - t0
+        assert run.succeeded()
+        rep = run.report()
+        assert len(rep.critical_path) >= 1
+        assert rep.reconciles(wall), \
+            f"attributed {rep.attributed_s:.4f}s vs wall {wall:.4f}s"
+        tree = c.tree(run.run_id)
+        assert sum(s.chunks for s in tree.steps) >= 8 * 6
+        # channel accounting folded into the producer spans
+        p = next(s for s in tree.steps if s.step == "p")
+        assert p.annotations.get("stream_chunks") == 6
+    finally:
+        eng.close()
+
+
+def test_jsonl_round_trip_and_chrome_export():
+    eng = _engine()
+    try:
+        c = couler.observe(eng)
+        eng.submit(_chain("exp1"), optimize=False)
+        eng.submit(_chain("exp2"), optimize=False)
+        text = c.export_jsonl()
+        trees = load_jsonl(text)
+        assert {t.workflow for t in trees} == {"exp1", "exp2"}
+        orig = {t.run_id: t for t in c.trees()}
+        for t in trees:
+            assert t.makespan_s == pytest.approx(orig[t.run_id].makespan_s)
+            assert [s.step for s in t.steps] == \
+                   [s.step for s in orig[t.run_id].steps]
+            assert build_report(t).attributed_s == \
+                pytest.approx(build_report(orig[t.run_id]).attributed_s)
+        trace = c.export_chrome()
+        assert validate_chrome_trace(trace) == []
+        json.dumps(trace)                    # loadable = serializable
+        names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "X"}
+        assert any(n.startswith("a:") for n in names)
+        assert "compute" in names
+        pids = {e["pid"] for e in trace["traceEvents"]}
+        assert len(pids) == 2                # one process per run
+    finally:
+        eng.close()
+
+
+def test_chrome_validator_flags_malformed():
+    assert validate_chrome_trace({}) != []
+    assert validate_chrome_trace({"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 0, "name": "n", "ts": 0}]}) != []
+    assert validate_chrome_trace({"traceEvents": [
+        {"ph": "Q", "pid": 1, "tid": 0, "name": "n"}]}) != []
+
+
+def test_collector_lru_bounds_finished_runs():
+    c = ObsCollector(max_runs=3)
+    eng = _engine()
+    try:
+        eng.gateway.attach_collector(c)
+        runs = [eng.submit(_chain(f"lru{i}"), optimize=False)
+                for i in range(5)]
+        assert all(r.succeeded() for r in runs)
+        assert len(c.trees()) == 3
+        assert c.tree(runs[0].run_id) is None       # rotated out
+        assert c.tree(runs[-1].run_id) is not None
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# cluster engine: registry-backed metrics + coarse span ingestion
+# ---------------------------------------------------------------------------
+
+def test_cluster_metrics_view_and_observe():
+    eng = MultiClusterEngine()
+    c = couler.observe(eng)
+    run = eng.submit(_chain("clus"), user="u0")
+    assert run.status == "Succeeded"
+    m = eng.metrics
+    assert m["scheduled_jobs"] == 3 and m["completed_workflows"] == 1
+    busy = m["cluster_busy_s"]
+    assert isinstance(busy, dict) and sum(busy.values()) > 0
+    assert m == {**dict(m.items())}          # view equals its dict snapshot
+
+
+def test_cluster_submit_admitted_ingests_spans():
+    from repro.core.gateway.run import AsyncWorkflowRun
+    eng = MultiClusterEngine()
+    c = couler.observe(eng)
+    q = AdmissionQueue()
+    wf = _chain("adm")
+    h = AsyncWorkflowRun(wf.name, tenant="t0")
+    q.offer(AdmittedItem(wf=wf, tenant="t0", handle=h))
+    runs = eng.submit_admitted(q)
+    run = runs[wf.name]
+    assert run.status == "Succeeded"
+    rep = run.report()                        # weakref back to the collector
+    assert rep.status == "Succeeded"
+    assert c.tree(run.run_id).tenant == "t0"

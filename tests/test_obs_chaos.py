@@ -1,0 +1,175 @@
+"""Span derivation under chaos (satellite of the observability PR).
+
+Replays seeded fault plans through an observed gateway engine and asserts
+the collector reconstructs the fault story exactly from the event stream:
+one ``retry`` segment per ``STEP_RETRY`` event (with ``WORKER_LOST``
+causes attached where a loss preceded the retry), one
+``readmission-backoff`` segment per ``WORKFLOW_REQUEUED``, no span leaks
+(every builder finalized, every span closed), and a makespan partition
+that still sums exactly despite retries and requeues.
+"""
+import time
+
+import pytest
+
+from repro.core import couler
+from repro.core.caching import CacheStore
+from repro.core.engines.local import LocalEngine
+from repro.core.faults import FaultPlan, ReadmissionPolicy
+from repro.core.gateway import EventType
+
+
+def _engine(**kw):
+    kw.setdefault("cache", CacheStore())
+    kw.setdefault("enable_speculation", False)
+    kw.setdefault("check_events", True)
+    kw.setdefault("retry_backoff_s", 0.001)
+    kw.setdefault("retry_backoff_max_s", 0.01)
+    return LocalEngine(**kw)
+
+
+def _chain(name, sleep=0.0):
+    with couler.workflow(name) as ir:
+        a = couler.run_step(lambda: (time.sleep(sleep), 2)[1], step_name="a")
+        b = couler.run_step(lambda x: (time.sleep(sleep), x * 3)[1], a,
+                            step_name="b")
+        couler.run_step(lambda x: x + 1, b, step_name="c")
+    return ir
+
+
+def _fault_story(evs):
+    retries = [e for e in evs if e.type is EventType.STEP_RETRY]
+    losses = [e for e in evs if e.type is EventType.WORKER_LOST]
+    requeues = [e for e in evs if e.type is EventType.WORKFLOW_REQUEUED]
+    return retries, losses, requeues
+
+
+def test_retry_segments_match_seeded_fault_plan():
+    plan = FaultPlan(seed=9, crash_rate=0.25, permanent_rate=0.0,
+                     worker_loss_rate=0.1, max_failures_per_site=4)
+    eng = _engine(fault_plan=plan)
+    try:
+        c = couler.observe(eng)
+        handle = eng.gateway.submit_nowait(_chain("chaos1"), block=True)
+        run = handle.result()
+        assert run.succeeded()
+        retries, losses, _ = _fault_story(handle.events_so_far())
+        assert retries, "seed 9 must inject at least one retry"
+        tree = c.tree(run.run_id)
+        segs = tree.retry_segments
+        assert len(segs) == len(retries)
+        # a WORKER_LOST preceding a step's retry becomes that segment's
+        # cause; plain crashes keep the generic STEP_RETRY cause (a step
+        # may carry both kinds across its attempts)
+        assert {seg.cause for seg, _ in segs} <= \
+            {"WORKER_LOST", "STEP_RETRY"}
+        assert sum(1 for seg, _ in segs if seg.cause == "WORKER_LOST") == \
+            len(losses)
+        assert {step for seg, step in segs
+                if seg.cause == "WORKER_LOST"} == {e.step for e in losses}
+        assert c.open_run_ids == []
+        for sp in tree.steps:
+            assert sp.end is not None, f"span {sp.step} left open"
+    finally:
+        eng.close()
+
+
+def test_readmission_backoff_segments_reconstruct_exactly():
+    # every attempt crashes until the cap: the in-run retry budget
+    # exhausts, the workflow requeues with backoff, then converges
+    plan = FaultPlan(seed=1, crash_rate=1.0, max_failures_per_site=5)
+    eng = _engine(fault_plan=plan,
+                  readmission=ReadmissionPolicy(base_backoff_s=0.02,
+                                                max_backoff_s=0.1))
+    try:
+        c = couler.observe(eng)
+        t0 = time.time()
+        handle = eng.gateway.submit_nowait(_chain("chaos2", sleep=0.005),
+                                           block=True)
+        run = handle.result()
+        wall = time.time() - t0
+        assert run.succeeded()
+        retries, _, requeues = _fault_story(handle.events_so_far())
+        assert requeues, "seed 1 at rate 1.0 must requeue at least once"
+        tree = c.tree(run.run_id)
+        backoffs = [s for s in tree.segments
+                    if s.kind == "readmission-backoff"]
+        assert len(backoffs) == len(requeues)
+        for seg in backoffs:
+            assert seg.end >= seg.start and seg.cause == "WORKFLOW_REQUEUED"
+        assert len(tree.retry_segments) == len(retries)
+        # requeue epochs recorded; re-run spans carry the later epoch
+        assert max(sp.epoch for sp in tree.steps) == len(requeues)
+        # spans open at the requeue were closed as Reverted, none leaked
+        assert c.open_run_ids == []
+        statuses = {sp.status for sp in tree.steps}
+        assert "Reverted" not in statuses or \
+            all(sp.end is not None for sp in tree.steps)
+        # attribution still partitions the makespan exactly, and the
+        # backoff windows show up as their own bucket
+        rep = run.report()
+        assert rep.attributed_s == pytest.approx(rep.makespan_s, abs=1e-9)
+        assert rep.totals.get("readmission-backoff", 0) > 0
+        assert rep.reconciles(wall), \
+            f"attributed {rep.attributed_s:.4f}s vs wall {wall:.4f}s"
+    finally:
+        eng.close()
+
+
+def test_worker_loss_cause_annotated():
+    plan = FaultPlan(seed=2, worker_loss_rate=1.0, max_failures_per_site=1)
+    eng = _engine(fault_plan=plan)
+    try:
+        c = couler.observe(eng)
+        handle = eng.gateway.submit_nowait(_chain("chaos3"), block=True)
+        run = handle.result()
+        assert run.succeeded()
+        _, losses, _ = _fault_story(handle.events_so_far())
+        assert len(losses) == 3               # one per site, capped at 1
+        tree = c.tree(run.run_id)
+        assert [c_["type"] for c_ in tree.causes].count("WORKER_LOST") == 3
+        for seg, step in tree.retry_segments:
+            assert seg.cause == "WORKER_LOST"
+    finally:
+        eng.close()
+
+
+def test_failed_run_spans_closed_and_counted():
+    plan = FaultPlan(seed=0, permanent_rate=1.0, max_failures_per_site=1)
+    eng = _engine(fault_plan=plan,
+                  readmission=ReadmissionPolicy(base_backoff_s=0.001,
+                                                max_backoff_s=0.01,
+                                                max_readmissions=0))
+    try:
+        c = couler.observe(eng)
+        run = eng.submit(_chain("chaos4"))
+        assert run.status == "Failed"
+        tree = c.tree(run.run_id)
+        assert tree.status == "Failed"
+        assert c.open_run_ids == []
+        failed = [sp for sp in tree.steps if sp.status == "Failed"]
+        assert failed and failed[0].segments[-1].cause  # carries the error
+        assert c.registry.get_value("obs_runs_total", status="Failed") == 1
+    finally:
+        eng.close()
+
+
+def test_identical_plan_identical_span_story():
+    # determinism end to end: same seed -> same retry/requeue counts in
+    # the derived trees, not just in the raw event stream
+    def story():
+        plan = FaultPlan(seed=11, crash_rate=0.3, worker_loss_rate=0.2,
+                         max_failures_per_site=3)
+        eng = _engine(fault_plan=plan,
+                      readmission=ReadmissionPolicy(base_backoff_s=0.001,
+                                                    max_backoff_s=0.01))
+        try:
+            c = couler.observe(eng)
+            run = eng.submit(_chain("chaos5"))
+            t = c.tree(run.run_id)
+            return (run.status, len(t.retry_segments),
+                    sorted((s.step, s.status, s.attempts) for s in t.steps))
+        finally:
+            eng.close()
+
+    assert story() == story()
