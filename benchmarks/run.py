@@ -49,9 +49,9 @@ SUITES = [
     ("throughput_rq1", "benchmarks.bench_throughput", {"n_workflows": 300},
      lambda rows: "workflows_per_s=" + str(rows[0]["workflows_per_s"])),
     ("observability_overhead", "benchmarks.bench_obs", {"n_workflows": 2000},
-     lambda rows: "overhead_pct=%s_under_2pct=%s_inc_ns=%s" % (
+     lambda rows: "overhead_pct=%s_under_2pct=%s_telemetry_pct=%s_under_2pct=%s" % (
          rows[0]["overhead_pct"], rows[0]["overhead_under_2pct"],
-         rows[1]["counter_inc_ns"])),
+         rows[2]["overhead_pct"], rows[2]["overhead_under_2pct"])),
     ("analysis_overhead", "benchmarks.bench_analysis", {"n_workflows": 2000},
      lambda rows: "lint_pct_of_submit=%s_under_2pct=%s_linear=%s" % (
          rows[0]["overhead_pct"], rows[0]["overhead_under_2pct"],
@@ -87,13 +87,56 @@ SUITES = [
 ]
 
 
+def check_trajectory(threshold_pct: float = 25.0) -> int:
+    """Regression watchdog over the latest consolidated BENCH file.
+
+    Reads the most recent ``BENCH_<date>.json`` and fails (returns the
+    number of offending suites) when any suite's recorded trajectory
+    shows a wall-clock regression above ``threshold_pct`` vs the prior
+    BENCH file it was compared against. With fewer than two BENCH files
+    on disk there is no trajectory to judge — that is a skip (0), not a
+    failure, so fresh clones stay green.
+    """
+    files = sorted(OUT.glob("BENCH_*.json"))
+    if not files:
+        print("# bench-check: no BENCH files — skip", file=sys.stderr)
+        return 0
+    latest = json.loads(files[-1].read_text())
+    traj = latest.get("trajectory", {}).get("suites", {})
+    if not traj:
+        print(f"# bench-check: {files[-1].name} has no trajectory "
+              "(first recorded run) — skip", file=sys.stderr)
+        return 0
+    baseline = latest.get("trajectory", {}).get("baseline", "?")
+    bad = 0
+    for name, t in sorted(traj.items()):
+        if t["delta_pct"] > threshold_pct:
+            bad += 1
+            print(f"# bench-check REGRESSION {name}: {t['prev_wall_s']}s -> "
+                  f"{t['wall_s']}s ({t['delta_pct']:+.1f}% > "
+                  f"+{threshold_pct:.0f}%)", file=sys.stderr)
+    print(f"# bench-check: {files[-1].name} vs {baseline}: "
+          f"{len(traj)} suites, {bad} over +{threshold_pct:.0f}%",
+          file=sys.stderr)
+    return bad
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="run each suite at reduced scale (CI smoke mode)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="suite names to run (default: all)")
+    ap.add_argument("--check", action="store_true",
+                    help="judge the recorded bench trajectory instead of "
+                         "running suites; exit nonzero on any >25%% "
+                         "wall-clock regression")
+    ap.add_argument("--check-threshold", type=float, default=25.0,
+                    help="regression threshold in percent (default 25)")
     args = ap.parse_args(argv)
+
+    if args.check:
+        sys.exit(1 if check_trajectory(args.check_threshold) else 0)
 
     OUT.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")

@@ -1,0 +1,178 @@
+"""Live terminal fleet dashboard over the continuous-telemetry fabric.
+
+    PYTHONPATH=src python scripts/obs_dashboard.py telemetry.jsonl
+    PYTHONPATH=src python scripts/obs_dashboard.py --demo [--frames N]
+
+Offline mode replays a ``TimeSeriesDB`` JSONL dump (whatever
+``couler.telemetry(engine, path=...)`` persisted) and renders one frame
+from the final sample. ``--demo`` runs a small multi-tenant fleet
+in-process — stragglers injected for one tenant, an SLO per tenant —
+and renders a frame per sampling window so the burn-rate / alert panels
+actually light up.
+
+Three panels per frame (plain text, no curses dependency):
+
+* **fleet summary** — submitted / completed / failed workflow counters,
+  admission depth + sheds, cache hit ratio, inflight steps and the
+  windowed submit rate;
+* **SLO status** — per-tenant objective burn rates (short / long
+  window) and whether the tenant is currently burning;
+* **firing alerts** — alerts from the anomaly + SLO monitors within the
+  last ``--window`` seconds, most recent first.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.engines.local import LocalEngine  # noqa: E402  (import
+# order: engines first — repro.core.faults alone trips a pre-existing
+# circular import)
+from repro.core.obs.anomaly import AnomalyMonitor  # noqa: E402
+from repro.core.obs.slo import SLO, SLOMonitor  # noqa: E402
+from repro.core.obs.timeseries import TimeSeriesDB  # noqa: E402
+
+WIDTH = 72
+
+
+def _bar(title: str) -> str:
+    pad = WIDTH - len(title) - 4
+    return f"== {title} " + "=" * max(0, pad)
+
+
+def _v(tsdb: TimeSeriesDB, name: str, default: float = 0.0) -> float:
+    v = tsdb.latest(name)
+    return v if v is not None else default
+
+
+def _sum_prefix(tsdb: TimeSeriesDB, prefix: str) -> float:
+    return sum(_v(tsdb, n) for n in tsdb.names() if n.startswith(prefix))
+
+
+def render_frame(tsdb: TimeSeriesDB, anomaly=None, slo=None,
+                 window_s: float = 60.0, now=None) -> str:
+    """One dashboard frame as a string (also the unit the tests pin)."""
+    now = now if now is not None else (tsdb.latest_ts() or time.time())
+    lines = [_bar("fleet summary")]
+    sub = _v(tsdb, "gateway_workflows_submitted_total")
+    done = _v(tsdb, "gateway_workflows_completed_total")
+    fail = _v(tsdb, "gateway_workflows_failed_total")
+    rate = tsdb.rate("gateway_workflows_submitted_total", window_s, now=now)
+    lines.append(f"workflows   submitted={sub:.0f} completed={done:.0f} "
+                 f"failed={fail:.0f}  ({rate:.2f}/s over {window_s:.0f}s)")
+    depth = _v(tsdb, "admission_depth")
+    shed = _v(tsdb, "admission_shed_total")
+    lines.append(f"admission   depth={depth:.0f} shed_total={shed:.0f} "
+                 f"tenants={_v(tsdb, 'admission_tenants'):.0f}")
+    hits = _sum_prefix(tsdb, "cache_hits_total")
+    misses = _sum_prefix(tsdb, "cache_misses_total")
+    total = hits + misses
+    ratio = hits / total if total else 0.0
+    lines.append(f"cache       hits={hits:.0f} misses={misses:.0f} "
+                 f"hit_ratio={ratio:.2f}")
+    lines.append(f"steps       inflight={_v(tsdb, 'gateway_inflight_steps'):.0f} "
+                 f"peak={_v(tsdb, 'gateway_peak_inflight_steps'):.0f}  "
+                 f"samples={tsdb.samples_taken}")
+
+    lines.append(_bar("slo status"))
+    if slo is None or not slo.objectives:
+        lines.append("(no SLOs configured)")
+    else:
+        st = slo.status(now=now)
+        for tenant, s in sorted(st.items()):
+            flag = "BURNING" if s["burning"] else "ok"
+            lines.append(f"{tenant:<16} {flag:<8} runs={s['runs_seen']}")
+            for name, o in s["objectives"].items():
+                lines.append(
+                    f"  {name:<20} burn {o['burn_short']:.1f}x/"
+                    f"{o['burn_long']:.1f}x (n={o['n_short']}/{o['n_long']})")
+
+    lines.append(_bar("firing alerts"))
+    firing = []
+    if anomaly is not None:
+        firing += list(anomaly.firing(within_s=window_s))
+    if slo is not None:
+        lo = now - window_s
+        firing += [a for a in slo.alerts if a.ts >= lo]
+    if not firing:
+        lines.append("(none)")
+    for a in sorted(firing, key=lambda a: -a.ts)[:10]:
+        scope = f" [{a.scope}]" if a.scope else ""
+        lines.append(f"{a.severity.upper():<8} {a.detector}{scope}: "
+                     f"{a.reason}"[:WIDTH])
+    return "\n".join(lines)
+
+
+def _offline(path: str, window_s: float) -> int:
+    tsdb = TimeSeriesDB.load_jsonl(path)
+    if not len(tsdb):
+        print(f"no samples in {path}", file=sys.stderr)
+        return 1
+    print(f"{path}: {tsdb.samples_taken} samples, "
+          f"{len(tsdb.names())} series")
+    print(render_frame(tsdb, window_s=window_s))
+    return 0
+
+
+def _demo(frames: int, window_s: float) -> int:
+    import repro.core.api as couler
+    from repro.core.caching import CacheStore
+    from repro.core.faults import FaultPlan
+
+    mon = AnomalyMonitor()
+    # seed a fast baseline so the injected straggler is an outlier
+    for k in range(10):
+        mon.straggler.note("demo-batch/train", 0.01, ts=float(k))
+    slos = SLOMonitor([
+        SLO(tenant="research", completion_rate=0.9),
+        SLO(tenant="prod", completion_rate=0.99, makespan_budget_s=5.0),
+    ], short_window_s=30.0, long_window_s=120.0, min_runs=3)
+    eng = LocalEngine(
+        max_workers=4, cache=CacheStore(), enable_speculation=False,
+        fault_plan=FaultPlan(seed=11, straggler_rate=1.0,
+                             straggler_delay_s=0.3,
+                             targets=frozenset({"train"})),
+        telemetry_interval_s=0.1, anomaly=mon, slo=slos)
+    try:
+        def prep(i):
+            return i + 1
+
+        def train(x):
+            return x * 2
+        for frame in range(frames):
+            for tenant in ("research", "prod"):
+                with couler.workflow("demo-batch") as wf:
+                    p = couler.run_step(prep, frame, step_name="prep")
+                    couler.run_step(train, p, step_name="train")
+                eng.submit(wf, tenant=tenant)
+            time.sleep(0.15)    # let a sampling tick land
+            gw = eng.gateway
+            print(f"\n--- frame {frame + 1}/{frames} ---")
+            print(render_frame(gw.tsdb, anomaly=gw.anomaly, slo=gw.slo,
+                               window_s=window_s))
+        return 0
+    finally:
+        eng.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("jsonl", nargs="?", help="TimeSeriesDB JSONL dump")
+    ap.add_argument("--demo", action="store_true",
+                    help="run a live in-process fleet demo")
+    ap.add_argument("--frames", type=int, default=3,
+                    help="demo frames to render (default 3)")
+    ap.add_argument("--window", type=float, default=60.0,
+                    help="alert/rate window in seconds (default 60)")
+    args = ap.parse_args(argv)
+    if args.demo:
+        return _demo(args.frames, args.window)
+    if not args.jsonl:
+        ap.error("give a telemetry JSONL file or --demo")
+    return _offline(args.jsonl, args.window)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

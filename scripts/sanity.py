@@ -411,12 +411,203 @@ def workflow_lint_sanity() -> bool:
     return True
 
 
+def telemetry_sanity() -> bool:
+    """Continuous-telemetry fuzz, four claims: (a) seeded chaos produces
+    the deterministic in-band ALERTs — a targeted straggler against a
+    pre-seeded baseline, a readmission storm under targeted permanent
+    faults — and every stream still passes the TraceChecker (invariant
+    9); (b) every alert in the monitor logs re-derives from its own
+    ``context`` (no unjustified alert can survive this fuzz); (c) a
+    clean 24-workflow corpus — both a deterministic direct feed and a
+    live fuzz batch — raises zero alerts; (d) the merged telemetry
+    snapshot round-trips through the OpenMetrics renderer/parser."""
+    from repro.core.analysis import TraceChecker
+    from repro.core.engines.local import LocalEngine
+    from repro.core.faults import FaultPlan, ReadmissionPolicy
+    from repro.core.gateway import EventType
+    from repro.core.ir import Job, WorkflowIR
+    from repro.core.obs.anomaly import AnomalyMonitor
+    from repro.core.obs.exposition import (parse_openmetrics,
+                                           render_openmetrics)
+    from repro.core.obs.slo import SLO, SLOMonitor
+
+    def justified(a, mon) -> bool:
+        c = a.context
+        if a.detector == "straggler":
+            z = 0.6745 * (c["duration_s"] - c["median_s"]) / c["scale_s"]
+            return (abs(z - a.value) < 1e-6 and z > a.threshold
+                    and c["n_samples"] >= mon.straggler.min_samples
+                    and c["duration_s"] > 2.0 * c["median_s"])
+        if a.detector == "readmission_storm":
+            return a.value == c["count"] and c["count"] >= a.threshold
+        if a.detector == "slo_burn":
+            return (c["burn_short"] > a.threshold
+                    and c["burn_long"] > a.threshold)
+        if a.detector == "cache_hit_drift":
+            drop = c["ratio_long"] - c["ratio_short"]
+            return abs(drop - a.value) < 1e-9 and drop > a.threshold
+        if a.detector == "admission_saturation":
+            return a.value >= a.threshold
+        return False            # unknown detector == unjustified
+
+    monitors = []
+    try:
+        # (a1) straggler: baseline pre-seeded, one targeted 0.4s delay
+        mon = AnomalyMonitor()
+        for k in range(10):
+            mon.straggler.note("tele/s1", 0.01 + 0.001 * k, ts=float(k))
+        eng = LocalEngine(
+            max_workers=2, enable_speculation=False, check_events=True,
+            fault_plan=FaultPlan(seed=7, straggler_rate=1.0,
+                                 straggler_delay_s=0.4,
+                                 targets=frozenset({"s1"})),
+            telemetry_interval_s=0.05, anomaly=mon,
+            slo=SLOMonitor([SLO(tenant="t0")]))
+        try:
+            wf = WorkflowIR("tele")
+            wf.add_job(Job(name="s0", fn=lambda: 1, cacheable=False))
+            wf.add_job(Job(name="s1", fn=lambda: 2, cacheable=False))
+            wf.add_edge("s0", "s1")
+            h = eng.gateway.submit_nowait(wf, tenant="t0", block=True)
+            run = h.result()
+            assert run.succeeded(), run.status
+            evs = h.events_so_far()
+            TraceChecker.check(evs, wf=wf)
+            inband = [e for e in evs if e.type is EventType.ALERT]
+            assert [e.status for e in inband] == ["straggler"], inband
+            assert inband[0].step == "s1", inband[0]
+            assert eng.gateway.tsdb.samples_taken > 0, "no sampling ticks"
+            # (d) merged snapshot -> OpenMetrics -> parse, counters agree
+            merged = {}
+            for reg in eng.gateway._telemetry_sources():
+                merged.update(reg.snapshot())
+            parsed = parse_openmetrics(render_openmetrics(merged))
+            assert parsed["gateway_workflows_submitted_total"] == float(
+                merged["gateway_workflows_submitted_total"])
+            assert parsed['alerts_total{detector="straggler"}'] == 1.0
+            n_series = len(parsed)
+        finally:
+            eng.close()
+        monitors.append(mon)
+
+        # (a2) readmission storm: targeted permanent faults, capped at 3
+        # failures per site -> exactly 3 requeues -> one storm alert
+        mon2 = AnomalyMonitor()
+        eng = LocalEngine(
+            max_workers=2, enable_speculation=False, check_events=True,
+            fault_plan=FaultPlan(seed=5, permanent_rate=1.0,
+                                 targets=frozenset({"s0"}),
+                                 max_failures_per_site=3),
+            readmission=ReadmissionPolicy(base_backoff_s=0.005,
+                                          max_backoff_s=0.02),
+            telemetry_interval_s=0.05, anomaly=mon2)
+        try:
+            wf = WorkflowIR("storm")
+            wf.add_job(Job(name="s0", fn=lambda: 3, cacheable=False))
+            h = eng.gateway.submit_nowait(wf, tenant="t1", block=True)
+            run = h.result()
+            assert run.succeeded(), run.status
+            evs = h.events_so_far()
+            TraceChecker.check(evs, wf=wf)
+            req = [e for e in evs if e.type is EventType.WORKFLOW_REQUEUED]
+            storm = [e for e in evs if e.type is EventType.ALERT
+                     and e.status == "readmission_storm"]
+            assert len(req) == 3, f"{len(req)} requeues"
+            assert len(storm) == 1, f"{len(storm)} storm alerts (hysteresis)"
+        finally:
+            eng.close()
+        monitors.append(mon2)
+
+        # (b) justification fuzz over every recorded alert
+        n_alerts = 0
+        for m in monitors:
+            for a in list(m.alerts):
+                assert justified(a, m), f"unjustified alert: {a.to_dict()}"
+                n_alerts += 1
+        assert n_alerts >= 2, "expected straggler + storm alerts"
+
+        # (c1) deterministic clean feed: 24 workflows x 6 uniform steps
+        clean = AnomalyMonitor()
+        rng = random.Random(21)
+        t = 0.0
+        for i in range(24):
+            for j in range(6):
+                t += 0.5
+                a = clean.note_step_duration("clean", f"s{j}",
+                                             0.01 + rng.uniform(0, 0.004),
+                                             ts=t)
+                assert a is None, f"false positive: {a.to_dict()}"
+        assert len(clean.alerts) == 0
+
+        # (c2) live clean corpus: 24 fuzz DAGs under full telemetry
+        clean2 = AnomalyMonitor()
+        slos = SLOMonitor([SLO(tenant=f"t{i}") for i in range(3)])
+        eng = LocalEngine(max_workers=4, enable_speculation=False,
+                          check_events=True, telemetry_interval_s=0.02,
+                          anomaly=clean2, slo=slos)
+        try:
+            rng = random.Random(3)
+            handles = []
+            for i in range(24):
+                wf = WorkflowIR(f"tclean-{i}")
+                n = rng.randint(2, 5)
+                for j in range(n):
+                    wf.add_job(Job(name=f"s{j}",
+                                   fn=lambda: time.sleep(0.001),
+                                   cacheable=False))
+                for j in range(1, n):
+                    for k in range(j):
+                        if rng.random() < 0.4:
+                            wf.add_edge(f"s{k}", f"s{j}")
+                handles.append(eng.gateway.submit_nowait(
+                    wf, tenant=f"t{i % 3}", block=True))
+            runs = [h.result() for h in handles]
+            assert all(r.succeeded() for r in runs)
+            for h in handles:
+                evs = h.events_so_far()
+                assert not any(e.type is EventType.ALERT for e in evs)
+            assert len(clean2.alerts) == 0, list(clean2.alerts)
+            assert len(slos.alerts) == 0, list(slos.alerts)
+        finally:
+            eng.close()
+    except AssertionError as e:
+        print(f"FAIL telemetry {e}")
+        traceback.print_exc()
+        return False
+    print(f"OK   telemetry {n_alerts} seeded alerts justified, "
+          f"0 false positives on 24 clean runs, "
+          f"{n_series} OpenMetrics samples round-tripped")
+    return True
+
+
+def bench_trajectory_sanity() -> bool:
+    """Bench regression watchdog: the recorded BENCH trajectory must be
+    judged green by benchmarks/run.py --check (no suite >25% slower than
+    the previous consolidated file; <2 files is a skip, not a failure)."""
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    try:
+        from benchmarks.run import check_trajectory
+        bad = check_trajectory(25.0)
+    except Exception as e:  # noqa: BLE001
+        print(f"FAIL bench_trajectory {type(e).__name__}: {e}")
+        traceback.print_exc()
+        return False
+    if bad:
+        print(f"FAIL bench_trajectory {bad} suite(s) regressed >25%")
+        return False
+    print("OK   bench_trajectory no suite regressed >25%")
+    return True
+
+
 ok = cache_tier_sanity() and ok
 ok = gateway_event_sanity() and ok
 ok = streaming_event_sanity() and ok
 ok = chaos_sanity() and ok
 ok = obs_sanity() and ok
+ok = telemetry_sanity() and ok
 ok = workflow_lint_sanity() and ok
+ok = bench_trajectory_sanity() and ok
 for aid in only:
     spec = get_arch(aid)
     cfg = reduced(spec.model).replace(param_dtype="float32",

@@ -1,6 +1,6 @@
 """``TraceChecker`` — the executable spec of the gateway event invariants.
 
-``repro.core.gateway`` documents six ordering invariants over each run's
+``repro.core.gateway`` documents the ordering invariants over each run's
 ``WorkflowEvent`` stream. This module encodes them as a linear-time
 automaton: feed events in order through ``observe`` (O(1) amortized per
 event) and any breach raises ``TraceViolation`` naming the invariant.
@@ -47,13 +47,17 @@ Invariants (numbers match the gateway package docstring):
    ``CLUSTER_PREEMPTED`` is run-scope (the cluster simulator emits no
    step lifecycle) and may appear anywhere between admission and the
    terminal event.
+9. ``ALERT`` (a streaming anomaly detector firing in-band) appears only
+   between ``WORKFLOW_ADMITTED`` and the terminal event, and always
+   names its detector in ``status``. Alerts are advisory: they affect
+   no step bookkeeping and are collected on ``TraceChecker.alerts``.
 
 ``TraceViolation`` subclasses ``AssertionError`` so assertion-driven
 harnesses (the sanity fuzzes) treat breaches like any failed check.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Set
+from typing import Dict, Iterable, List, Optional, Set
 
 from repro.core.gateway.events import EventType, WorkflowEvent
 
@@ -91,6 +95,7 @@ class TraceChecker:
         self.step_terminal: Set[str] = set()
         self.chunks: Dict[str, int] = {}
         self.retries: Dict[str, int] = {}   # step -> last STEP_RETRY attempt
+        self.alerts: List[WorkflowEvent] = []   # in-band ALERT events seen
         self.epoch = 0                      # re-admissions observed
         self._last_seq: Optional[int] = None
         self.n_events = 0
@@ -148,6 +153,14 @@ class TraceChecker:
             if not self.admitted:
                 raise TraceViolation(8, "CLUSTER_PREEMPTED before "
                                         "WORKFLOW_ADMITTED", ev)
+        elif t is EventType.ALERT:
+            if not self.admitted:
+                raise TraceViolation(9, "ALERT before WORKFLOW_ADMITTED",
+                                     ev)
+            if not ev.status:
+                raise TraceViolation(9, "ALERT without a detector name",
+                                     ev)
+            self.alerts.append(ev)
         elif ev.is_step_event:
             if not self.admitted:
                 raise TraceViolation(1, f"{t.name} before "

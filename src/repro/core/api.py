@@ -396,5 +396,31 @@ def observe(engine, collector=None):
     return obs.observe(engine, collector)
 
 
+def telemetry(engine, interval_s: float = 0.25, anomaly=None, slos=None,
+              path=None):
+    """Turn on continuous fleet telemetry on ``engine``'s gateway: a
+    ``TimeSeriesDB`` sampled every ``interval_s`` seconds, streaming
+    anomaly detection (``anomaly`` — an ``AnomalyMonitor``; one with the
+    default detectors is created when None), and optional per-tenant SLO
+    burn-rate alerting (``slos`` — an ``SLOMonitor`` or an iterable of
+    ``SLO`` objectives). JSONL persistence when ``path`` is given.
+    Returns ``(tsdb, anomaly_monitor, slo_monitor)``; see
+    ``docs/observability.md``."""
+    from repro.core.obs.anomaly import AnomalyMonitor
+    from repro.core.obs.slo import SLOMonitor
+    gw = getattr(engine, "gateway", None)
+    if gw is None or not hasattr(gw, "start_telemetry"):
+        raise TypeError(
+            f"engine {type(engine).__name__} has no gateway — nothing to "
+            "sample (MultiClusterEngine: use attach_telemetry instead)")
+    if anomaly is None:
+        anomaly = AnomalyMonitor()
+    slo_mon = None
+    if slos is not None:
+        slo_mon = slos if isinstance(slos, SLOMonitor) else SLOMonitor(slos)
+    return gw.start_telemetry(interval_s=interval_s, anomaly=anomaly,
+                              slo=slo_mon, path=path)
+
+
 def reset() -> None:
     _local.wf = WorkflowIR("default")

@@ -176,6 +176,7 @@ class MultiClusterEngine(Engine):
                                                       cluster=c.name)
                         for c in self.clusters}
         self._collector = None
+        self._tsdb = None
 
     @property
     def metrics(self) -> StatsView:
@@ -189,6 +190,13 @@ class MultiClusterEngine(Engine):
         handles' event streams are ingested into ``collector`` and each
         returned run gets a ``report()``-able back-reference."""
         self._collector = collector
+
+    def attach_telemetry(self, tsdb) -> None:
+        """Sample this engine's registry into ``tsdb`` (a
+        ``TimeSeriesDB``) at the end of every ``submit_many`` /
+        ``submit_admitted`` batch — the batch simulator has no daemon
+        loop, so batch boundaries are its sampling cadence."""
+        self._tsdb = tsdb
 
     def _quota(self, user: str) -> UserQuota:
         if user not in self.quotas:
@@ -537,6 +545,11 @@ class MultiClusterEngine(Engine):
             launch_pass()
         # the last *completion* time (recovery markers may outlive the work)
         self._m["makespan_s"].set(last_t)
+        if self._tsdb is not None:
+            try:
+                self._tsdb.sample(self.registry.snapshot())
+            except Exception:  # noqa: BLE001 — telemetry is advisory
+                pass
         return runs
 
     def submit(self, wf: WorkflowIR, optimize: bool = True, user: str = "u0",

@@ -94,8 +94,18 @@ class LocalEngine(Engine):
                  check_events: bool = False,
                  fault_plan: Optional[FaultPlan] = None,
                  frontier: bool = False,
-                 readmission=None):
+                 readmission=None,
+                 telemetry_interval_s: float = 0.0,
+                 anomaly=None,
+                 slo=None,
+                 telemetry_path=None,
+                 profile_steps: bool = False):
         self.max_workers = max_workers
+        # compute-layer profiling: jit compile-vs-execute split (AOT
+        # lower/compile when the step fn supports it) recorded on
+        # StepRecord.profile. Bypasses speculation — a profiled step is
+        # measured, not raced.
+        self.profile_steps = profile_steps
         self.cache = cache if cache is not None else CacheStore(
             capacity_bytes=1 << 30, policy=CoulerPolicy())
         self.budget = budget or Budget()
@@ -131,7 +141,11 @@ class LocalEngine(Engine):
                                   promote_interval_s=promote_interval_s,
                                   admission=admission,
                                   check_events=check_events,
-                                  readmission=readmission)
+                                  readmission=readmission,
+                                  telemetry_interval_s=telemetry_interval_s,
+                                  anomaly=anomaly,
+                                  slo=slo,
+                                  telemetry_path=telemetry_path)
 
     # ------------------------------------------------------------------
     @property
@@ -555,6 +569,14 @@ class LocalEngine(Engine):
                             raise fault              # died with the slot
                         else:
                             raise fault
+                    # straggler injection (separate draw sequence): the
+                    # delay lands inside the attempt, so rec.end-rec.start
+                    # carries it and the telemetry straggler detector sees
+                    # exactly what a slow worker would look like
+                    d = self.injector.straggler_delay(
+                        run.workflow.name, job.name)
+                    if d > 0:
+                        time.sleep(d)
                 value = self._invoke(job, run, mid_kill=mid_kill)
                 return value, time.time() - t0
             except Exception as e:  # noqa: BLE001
@@ -625,6 +647,9 @@ class LocalEngine(Engine):
             kwargs["ckpt"] = self._ckpt_session(job, run, mid_kill)
             return job.fn(*args, **kwargs)
 
+        if self.profile_steps:
+            return self._profiled_invoke(job, run, args)
+
         if not self.enable_speculation:
             return job.fn(*args, **job.kwargs)
 
@@ -676,3 +701,64 @@ class LocalEngine(Engine):
         finally:
             self._spec_pool_release(
                 spec_pool, busy=any(not f.done() for f in futures))
+
+    def _profiled_invoke(self, job: Job, run: WorkflowRun, args: List[Any]):
+        """Invoke with compute-layer profiling (``profile_steps=True``):
+        when the fn supports jax AOT (``fn.lower(...).compile()``) the
+        compile and execute phases are timed separately; otherwise the
+        plain call is timed whole. Only lower/compile failures fall back —
+        an exception from the *compiled* call propagates (re-running via
+        the plain path would double-execute user code). The profile lands
+        on ``StepRecord.profile``; the gateway folds it into histograms
+        and span annotations."""
+        fn = job.fn
+        prof: Dict[str, float] = {}
+        compiled = None
+        if hasattr(fn, "lower"):
+            t0 = time.time()
+            try:
+                compiled = fn.lower(*args, **job.kwargs).compile()
+                prof["compile_s"] = time.time() - t0
+            except Exception:   # noqa: BLE001 — not AOT-able: plain call
+                compiled = None
+        if compiled is not None:
+            t1 = time.time()
+            value = compiled(*args, **job.kwargs)
+            _block_until_ready(value)
+            prof["execute_s"] = time.time() - t1
+        else:
+            t1 = time.time()
+            value = fn(*args, **job.kwargs)
+            _block_until_ready(value)
+            prof["execute_s"] = time.time() - t1
+        mem = _device_memory_bytes()
+        if mem is not None:
+            prof["device_bytes_in_use"] = float(mem)
+        run.steps[job.name].profile = prof
+        return value
+
+
+def _block_until_ready(v: Any) -> None:
+    """Force async jax dispatch to finish so execute_s measures real
+    device time; a no-op for non-jax values."""
+    if hasattr(v, "block_until_ready"):
+        try:
+            v.block_until_ready()
+        except Exception:   # noqa: BLE001 — best-effort timing fence
+            pass
+
+
+def _device_memory_bytes() -> Optional[int]:
+    """bytes_in_use of the first jax device, when the backend exposes
+    memory_stats (CPU backends typically return None)."""
+    try:
+        import jax
+        devs = jax.local_devices()
+        if not devs:
+            return None
+        stats = devs[0].memory_stats()
+        if stats:
+            return stats.get("bytes_in_use")
+    except Exception:   # noqa: BLE001 — profiling never fails a step
+        return None
+    return None

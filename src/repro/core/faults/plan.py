@@ -82,6 +82,12 @@ class FaultPlan:
     # restrict injection to these sites — entries match a bare step name
     # or a qualified "workflow/step" (None = every step)
     targets: Optional[FrozenSet[str]] = None
+    # straggler injection (telemetry/anomaly exercises): per-attempt
+    # probability of delaying a step by straggler_delay_s before it runs.
+    # Drawn from a separate consult sequence ("straggler" coords), so
+    # enabling it never perturbs the crash/loss fault replay above.
+    straggler_rate: float = 0.0
+    straggler_delay_s: float = 0.25
 
     def __post_init__(self):
         total = self.crash_rate + self.permanent_rate + self.worker_loss_rate
@@ -111,6 +117,8 @@ class ChaosInjector:
         self._lock = threading.Lock()
         self._consults: Dict[Tuple[str, str], int] = {}
         self._injected: Dict[Tuple[str, str], int] = {}
+        self._straggler_consults: Dict[Tuple[str, str], int] = {}
+        self._m_straggler = None
         self.registry = registry if registry is not None \
             else MetricsRegistry("chaos")
         self._m = {
@@ -176,6 +184,32 @@ class ChaosInjector:
                          * max(1, plan.mid_step_kill_window))
                 return exc, at
             return exc, None
+
+    def straggler_delay(self, workflow: str, step: str) -> float:
+        """Consult the plan's straggler process for one attempt: returns
+        the delay to sleep before executing (0.0 for a clean attempt).
+        Separate consult counter and coord prefix from ``begin_attempt``,
+        so the crash/loss draw sequence is unchanged by straggler use."""
+        plan = self.plan
+        if plan.straggler_rate <= 0.0:
+            return 0.0
+        site = (workflow, step)
+        with self._lock:
+            k = self._straggler_consults.get(site, 0)
+            self._straggler_consults[site] = k + 1
+            if plan.targets is not None and step not in plan.targets \
+                    and f"{workflow}/{step}" not in plan.targets:
+                return 0.0
+            if plan._u("straggler", workflow, step, str(k)) \
+                    >= plan.straggler_rate:
+                return 0.0
+            # lazy: the series only exists once a straggler actually fires
+            # (keeps pre-existing snapshot shapes stable when unused)
+            if self._m_straggler is None:
+                self._m_straggler = self.registry.counter(
+                    "chaos_injected_total", kind="straggler")
+            self._m_straggler.inc()
+            return plan.straggler_delay_s
 
     def injected_at(self, workflow: str, step: str) -> int:
         with self._lock:

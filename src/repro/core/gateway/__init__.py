@@ -49,6 +49,12 @@ ordered sequence of ``WorkflowEvent``s:
     ``attempt`` is the re-admission round. Opens a new *epoch*: completed
     steps stay completed, failed steps reset to Pending and may emit a
     fresh ``STEP_STARTED``.
+``ALERT``
+    A streaming anomaly detector fired in-band (continuous telemetry,
+    ``couler.telemetry``): ``status`` names the detector (``straggler``,
+    ``readmission_storm``, ...), ``error`` carries the human-readable
+    reason, and ``step`` is set for step-scoped detectors. Advisory —
+    alerts never change run or step state.
 ``WORKFLOW_DONE``
     Terminal; exactly one per run, always last, with ``status`` in
     ``{"Succeeded", "Failed", "Cancelled"}``. A cancelled run keeps its
@@ -84,6 +90,9 @@ sanitizer mode — so a breach raises at the offending publish. In prose:
    terminal event and resets the checker's per-step bookkeeping (new
    epoch — re-admitted steps may legally re-emit ``STEP_STARTED``);
    ``CLUSTER_PREEMPTED`` may appear anywhere in that same span.
+9. ``ALERT`` falls strictly between admission and the terminal event and
+   always names its detector in ``status``; it touches no step
+   bookkeeping.
 
 Exception (encoded in the checker's cancel scoping): a step interrupted
 *mid-stream* by cooperative cancellation is reverted to ``Pending`` (the

@@ -66,11 +66,16 @@ class AdmissionQueue:
                  max_total: int = 8192,
                  weights: Optional[Dict[str, int]] = None,
                  default_weight: int = 1,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 tenant_retention_s: float = 300.0):
         self.max_depth_per_tenant = max_depth_per_tenant
         self.max_total = max_total
         self.weights = dict(weights or {})
         self.default_weight = max(1, default_weight)
+        # per-tenant series label GC: a tenant idle (no offer / pop / shed)
+        # longer than this is dropped from the registry so long-lived
+        # gateways don't accumulate unbounded label cardinality
+        self.tenant_retention_s = tenant_retention_s
         self._cv = threading.Condition()
         self._queues: Dict[str, Deque[AdmittedItem]] = {}
         self._ring: Deque[str] = deque()   # active tenants, WRR order
@@ -86,6 +91,11 @@ class AdmissionQueue:
                    for k in ("offered", "shed", "popped")}
         self._m_depth = self.registry.gauge("admission_depth")
         self.registry.gauge_fn("admission_tenants", lambda: len(self._ring))
+        # separate attribute (not in self._m — the legacy StatsView dict
+        # shape is pinned by tests)
+        self._m_gc = self.registry.counter("admission_tenant_gc_total")
+        self._last_active: Dict[str, float] = {}
+        self._last_gc = time.time()
 
     @property
     def stats(self) -> StatsView:
@@ -94,6 +104,7 @@ class AdmissionQueue:
     def _tenant_shed(self, tenant: str) -> None:
         self._m["shed"].inc()
         self.registry.counter("admission_shed_total", tenant=tenant).inc()
+        self._last_active[tenant] = time.time()
 
     # -- producer side -----------------------------------------------------
     def add_listener(self, cb: Callable[[], None]) -> None:
@@ -144,9 +155,12 @@ class AdmissionQueue:
             self._m_depth.inc()
             self.registry.gauge("admission_depth",
                                 tenant=item.tenant).inc()
+            self._last_active[item.tenant] = time.time()
             listeners = list(self._listeners)
         for cb in listeners:
             cb()
+        if time.time() - self._last_gc > self.tenant_retention_s:
+            self.gc_idle_tenants()
 
     def try_offer(self, item: AdmittedItem) -> bool:
         try:
@@ -195,9 +209,31 @@ class AdmissionQueue:
             self._m["popped"].inc()
             self._m_depth.dec()
             self.registry.gauge("admission_depth", tenant=t).dec()
+            self._last_active[t] = time.time()
             self._cv.notify_all()           # space freed: wake blocked offers
             return item
         return None
+
+    # -- per-tenant label GC ------------------------------------------------
+    def gc_idle_tenants(self, now: Optional[float] = None) -> List[str]:
+        """Drop the per-tenant registry series (``tenant=`` label) of
+        tenants idle longer than ``tenant_retention_s`` with nothing
+        queued. Aggregate counters are untouched; a returning tenant just
+        re-creates its series from zero. Returns the tenants dropped.
+        Called opportunistically from ``offer`` and from the gateway's
+        telemetry tick."""
+        now = time.time() if now is None else now
+        with self._cv:
+            self._last_gc = now
+            doomed = [t for t, ts in self._last_active.items()
+                      if now - ts > self.tenant_retention_s
+                      and t not in self._queues]
+            for t in doomed:
+                del self._last_active[t]
+        for t in doomed:                    # registry has its own lock
+            self.registry.drop_labeled("tenant", t)
+            self._m_gc.inc()
+        return doomed
 
     # -- introspection -----------------------------------------------------
     def depth(self, tenant: str) -> int:

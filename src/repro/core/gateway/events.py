@@ -24,6 +24,7 @@ class EventType(str, enum.Enum):
     STEP_FAILED = "STEP_FAILED"
     CLUSTER_PREEMPTED = "CLUSTER_PREEMPTED"   # run-scope: cluster went dark
     WORKFLOW_REQUEUED = "WORKFLOW_REQUEUED"   # failed run re-enters admission
+    ALERT = "ALERT"                           # anomaly detector fired in-band
     WORKFLOW_DONE = "WORKFLOW_DONE"           # terminal; exactly one per run
 
 
@@ -41,7 +42,9 @@ class WorkflowEvent:
     ``seq`` is a per-run monotonic counter (0 is always the admission
     event); ``status`` carries the step status for STEP_* events and the
     terminal run status ("Succeeded"/"Failed"/"Cancelled") for
-    WORKFLOW_DONE. ``chunk`` is the 0-based chunk index for STEP_CHUNK
+    WORKFLOW_DONE and the firing detector name for ALERT (whose ``error``
+    carries the human-readable reason). ``chunk`` is the 0-based chunk
+    index for STEP_CHUNK
     events (-1 otherwise). ``attempt`` is the 1-based attempt number for
     retry-related events: the attempt about to run for STEP_RETRY, the
     attempt that died for WORKER_LOST / CLUSTER_PREEMPTED, the admission

@@ -84,7 +84,11 @@ class WorkflowGateway:
                  check_events: bool = False,
                  readmission=None,
                  registry: Optional[MetricsRegistry] = None,
-                 collector=None):
+                 collector=None,
+                 telemetry_interval_s: float = 0.0,
+                 anomaly=None,
+                 slo=None,
+                 telemetry_path=None):
         self.engine = engine
         # sanitizer mode: attach a TraceChecker to every run's publish
         # path so an invariant breach raises at the offending event
@@ -110,6 +114,23 @@ class WorkflowGateway:
         # every submitted run is registered and observed
         self.collector = collector
         self.promote_interval_s = promote_interval_s
+        # continuous telemetry (couler.telemetry / telemetry_interval_s>0):
+        # a TimeSeriesDB sampled on the loop's daemon cadence, plus the
+        # optional anomaly monitor (in-band ALERT events) and SLO monitor
+        # (burn-rate alerts + admission priority nudge)
+        self.telemetry_interval_s = telemetry_interval_s
+        self.telemetry_path = telemetry_path
+        self.tsdb = None
+        self.anomaly = anomaly
+        self.slo = slo
+        self._telemetry_task: Optional[asyncio.Task] = None
+        if telemetry_interval_s and telemetry_interval_s > 0:
+            from repro.core.obs.timeseries import TimeSeriesDB
+            self.tsdb = TimeSeriesDB(path=telemetry_path)
+        if self.anomaly is not None:
+            self.anomaly.bind(self.registry)
+        if self.slo is not None:
+            self.slo.bind(self.registry)
         m = self.registry
         # workflow outcome counters — all increments go through the
         # thread-safe instruments (the old dict was mutated from the loop
@@ -183,6 +204,8 @@ class WorkflowGateway:
         self._pump_task = loop.create_task(self._pump())
         if self.promote_interval_s and self._cache_promotable():
             self._promote_task = loop.create_task(self._promote_loop())
+        if self.telemetry_interval_s and self.tsdb is not None:
+            self._telemetry_task = loop.create_task(self._telemetry_loop())
         self._started.set()
         try:
             loop.run_forever()
@@ -354,6 +377,11 @@ class WorkflowGateway:
                 run.status = "Succeeded"
                 self._m_wf["completed"].inc()
             await loop.run_in_executor(self._pool, run.persist)
+            if self.slo is not None:
+                self.slo.note_run(
+                    handle.tenant, ok=(run.status == "Succeeded"),
+                    makespan_s=run.wall_time_s,
+                    queue_wait_s=max(0.0, t0 - item.offered_at))
             handle._publish(EventType.WORKFLOW_DONE, status=run.status)
             handle._finish(run)
         except asyncio.CancelledError:
@@ -395,6 +423,12 @@ class WorkflowGateway:
                         attempt=item.readmit_count,
                         error=f"steps failed: {', '.join(failed)}"
                               if failed else "")
+        if self.anomaly is not None:
+            alert = self.anomaly.note_requeue(run.workflow.name,
+                                              tenant=handle.tenant)
+            if alert is not None:
+                handle._publish(EventType.ALERT, status=alert.detector,
+                                error=alert.reason)
         delay = pol.delay_s(item.readmit_count)
         asyncio.get_running_loop().create_task(
             self._requeue_later(item, delay))
@@ -589,6 +623,12 @@ class WorkflowGateway:
                             step=name, status=status.value,
                             error=run.steps[name].error)
                         self._record_frontier(run)
+                        prof = getattr(run.steps[name], "profile", None)
+                        if prof:
+                            self._fold_profile(run, name, prof)
+                        if self.anomaly is not None \
+                                and status is StepStatus.SUCCEEDED:
+                            self._note_step_telemetry(handle, run, name)
             finally:
                 finish_one(name, status)
 
@@ -694,3 +734,121 @@ class WorkflowGateway:
                 return
             except Exception:  # noqa: BLE001 — promotion is advisory
                 pass
+
+    # -- continuous telemetry ----------------------------------------------
+    def start_telemetry(self, interval_s: float = 0.25, anomaly=None,
+                        slo=None, path=None):
+        """Turn on continuous telemetry on a live gateway
+        (``couler.telemetry``): create the ``TimeSeriesDB`` (JSONL-backed
+        when ``path`` is given), bind the anomaly / SLO monitors to this
+        gateway's registry, and schedule the sampling task on the loop.
+        Returns ``(tsdb, anomaly, slo)``. Idempotent for the task: calling
+        again just updates the monitors/interval."""
+        from repro.core.obs.timeseries import TimeSeriesDB
+        self.telemetry_interval_s = interval_s
+        if self.tsdb is None:
+            self.tsdb = TimeSeriesDB(path=path or self.telemetry_path)
+        if anomaly is not None:
+            self.anomaly = anomaly
+        if self.anomaly is not None:
+            self.anomaly.bind(self.registry)
+        if slo is not None:
+            self.slo = slo
+        if self.slo is not None:
+            self.slo.bind(self.registry)
+        if self._started.is_set() and self._telemetry_task is None \
+                and self._loop is not None and not self._closed:
+            def _sched() -> None:
+                if self._telemetry_task is None:
+                    self._telemetry_task = \
+                        self._loop.create_task(self._telemetry_loop())
+            try:
+                self._loop.call_soon_threadsafe(_sched)
+            except RuntimeError:
+                pass
+        return self.tsdb, self.anomaly, self.slo
+
+    def _telemetry_sources(self) -> List[MetricsRegistry]:
+        """Registries feeding the TSDB, identity-deduped: the gateway's
+        own (admission shares it by default) plus the engine's cache /
+        chaos-injector / collector registries when distinct."""
+        seen: List[MetricsRegistry] = []
+        candidates = [
+            self.registry,
+            getattr(self.admission, "registry", None),
+            getattr(getattr(self.engine, "cache", None), "registry", None),
+            getattr(getattr(self.engine, "injector", None), "registry",
+                    None),
+            getattr(self.collector, "registry", None)
+            if self.collector is not None else None,
+        ]
+        for r in candidates:
+            if r is not None and all(r is not s for s in seen):
+                seen.append(r)
+        return seen
+
+    def _telemetry_tick(self, now: Optional[float] = None) -> None:
+        """One sampling pass (pool thread): merge registry snapshots into
+        the TSDB, GC idle admission tenants, run the streaming detectors
+        and the SLO burn evaluation + admission nudge."""
+        tsdb = self.tsdb
+        if tsdb is None:
+            return
+        merged: Dict[str, object] = {}
+        for reg in self._telemetry_sources():
+            merged.update(reg.snapshot())
+        tsdb.sample(merged, ts=now)
+        gc = getattr(self.admission, "gc_idle_tenants", None)
+        if callable(gc):
+            gc(now=now)
+        if self.anomaly is not None:
+            self.anomaly.evaluate(tsdb, now)
+        if self.slo is not None:
+            self.slo.evaluate(now)
+            self.slo.nudge(self.admission)
+
+    async def _telemetry_loop(self) -> None:
+        """Periodic sampling task (same template as ``_promote_loop``);
+        ticks run on the pool so snapshot/detector cost never blocks the
+        loop. Cancellation (engine shutdown) exits cleanly."""
+        loop = asyncio.get_running_loop()
+        while True:
+            await asyncio.sleep(self.telemetry_interval_s)
+            try:
+                await loop.run_in_executor(self._pool, self._telemetry_tick)
+            except RuntimeError:   # pool shut down mid-flight
+                return
+            except Exception:  # noqa: BLE001 — telemetry is advisory
+                pass
+
+    def _fold_profile(self, run: WorkflowRun, step: str,
+                      prof: Dict[str, float]) -> None:
+        """Record a step's compute-layer profile (jit compile vs execute
+        split, device memory) as registry histograms/gauges and annotate
+        its span so ``run.report()`` shows the breakdown."""
+        m = self.registry
+        if "compile_s" in prof:
+            m.histogram("step_compile_s").observe(prof["compile_s"])
+        if "execute_s" in prof:
+            m.histogram("step_execute_s").observe(prof["execute_s"])
+        if "device_bytes_in_use" in prof:
+            m.gauge("device_bytes_in_use").set(prof["device_bytes_in_use"])
+        if self.collector is not None:
+            self.collector.annotate_step(run.run_id, step, **prof)
+
+    def _note_step_telemetry(self, handle: AsyncWorkflowRun,
+                             run: WorkflowRun, step: str) -> None:
+        """Feed a succeeded step's duration to the straggler detector;
+        publish any resulting alert in-band. Runs on the loop thread right
+        after the step's terminal publish — never from inside an observer
+        (the handle's publish lock is not reentrant)."""
+        rec = run.steps.get(step)
+        if rec is None or rec.start is None or rec.end is None \
+                or rec.end <= rec.start:
+            return
+        alert = self.anomaly.note_step_duration(
+            run.workflow.name, step, rec.end - rec.start,
+            tenant=handle.tenant)
+        if alert is not None:
+            handle._publish(EventType.ALERT, step=step,
+                            status=alert.detector, error=alert.reason)

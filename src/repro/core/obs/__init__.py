@@ -21,10 +21,24 @@ say where workflow time goes). Three pillars:
   a ``MakespanReport`` ("62% compute on train, 21% queue wait, ...")
   whose segments partition the makespan exactly.
 
+Continuous-telemetry pillars on top of those (PR 10):
+
+* ``timeseries`` — bounded ring-buffer ``TimeSeriesDB`` sampling
+  registry snapshots on the gateway daemon loop (windowed rate /
+  percentile queries, JSONL persistence);
+* ``anomaly`` — streaming detectors (per-site straggler robust z-score,
+  readmission storms, cache-hit drift, admission saturation) emitting
+  typed ``ALERT`` events in-band on run streams;
+* ``slo`` — per-tenant SLO objectives with multi-window burn-rate
+  evaluation and an optional admission-queue priority nudge;
+* ``exposition`` — OpenMetrics text rendering of any snapshot.
+
 Entry points: ``couler.observe(engine)`` attaches a collector to an
 engine (every subsequent run is traced; ``run.report()`` then renders the
-breakdown), and ``scripts/obs_report.py`` is the offline CLI over JSONL
-exports.
+breakdown), ``couler.telemetry(engine)`` turns on continuous sampling +
+anomaly detection, ``scripts/obs_report.py`` is the offline CLI over
+JSONL exports, and ``scripts/obs_dashboard.py`` renders the live fleet
+view.
 """
 from repro.core.obs.metrics import (Counter, Gauge, Histogram,
                                     MetricsRegistry, StatsView)
@@ -34,6 +48,12 @@ __all__ = [
     "ObsCollector", "Segment", "SpanTree", "StepSpan", "chrome_trace",
     "load_jsonl", "validate_chrome_trace",
     "MakespanReport", "build_report", "critical_path", "observe",
+    "TimeSeriesDB",
+    "Alert", "AnomalyMonitor", "StragglerDetector",
+    "ReadmissionStormDetector", "CacheHitDriftDetector",
+    "AdmissionSaturationDetector",
+    "SLO", "SLOMonitor",
+    "render_openmetrics", "parse_openmetrics",
 ]
 
 # spans/attribution import the gateway event taxonomy, while the gateway
@@ -46,6 +66,13 @@ _LAZY = {
     "validate_chrome_trace": "spans",
     "MakespanReport": "attribution", "build_report": "attribution",
     "critical_path": "attribution",
+    "TimeSeriesDB": "timeseries",
+    "Alert": "anomaly", "AnomalyMonitor": "anomaly",
+    "StragglerDetector": "anomaly", "ReadmissionStormDetector": "anomaly",
+    "CacheHitDriftDetector": "anomaly",
+    "AdmissionSaturationDetector": "anomaly",
+    "SLO": "slo", "SLOMonitor": "slo",
+    "render_openmetrics": "exposition", "parse_openmetrics": "exposition",
 }
 
 

@@ -201,19 +201,50 @@ class MetricsRegistry:
         with self._lock:
             self._callbacks[name] = fn
 
+    # -- series removal (label GC) -----------------------------------------
+    def drop(self, name: str, **labels: str) -> bool:
+        """Remove one series (or, for a bare name with no instrument, a
+        ``gauge_fn`` callback). Returns False when absent. The instrument
+        object itself stays valid for holders of a stale reference — it
+        just no longer appears in snapshots."""
+        key = _series_key(name, labels)
+        with self._lock:
+            if self._instruments.pop(key, None) is not None:
+                return True
+            return self._callbacks.pop(name, None) is not None
+
+    def drop_labeled(self, label: str, value: str) -> int:
+        """Remove every series carrying ``label == value`` (per-tenant
+        label GC for departed tenants). Returns the number dropped."""
+        pair = (str(label), str(value))
+        with self._lock:
+            doomed = [k for k in self._instruments if pair in k[1]]
+            for k in doomed:
+                del self._instruments[k]
+        return len(doomed)
+
     # -- export ------------------------------------------------------------
     def series(self) -> List[Tuple[str, object]]:
         with self._lock:
             insts = list(self._instruments.values())
             cbs = list(self._callbacks.items())
-        out: List[Tuple[str, object]] = [
-            (format_series(i.name, i.labels), i.value) for i in insts]
+        extra: List[Tuple[str, object]] = []
+        errors = 0
         for name, fn in cbs:
             try:
-                out.append((name, fn()))
+                extra.append((name, fn()))
             except Exception:   # noqa: BLE001 — sampling is best-effort
-                pass
-        return out
+                errors += 1
+        if errors:
+            # a raising gauge_fn must not poison the snapshot — count it
+            # (``gauge_fn_errors_total``) and keep sampling the rest
+            c = self.counter("gauge_fn_errors_total")
+            c.inc(errors)
+            if all(i is not c for i in insts):
+                insts.append(c)
+        out: List[Tuple[str, object]] = [
+            (format_series(i.name, i.labels), i.value) for i in insts]
+        return out + extra
 
     def snapshot(self) -> Dict[str, object]:
         """Flat ``{series_name: value}`` dict (histograms nest their

@@ -276,6 +276,7 @@ class ObsCollector:
         self._m_retries = reg.counter("obs_retries_total")
         self._m_chunks = reg.counter("obs_chunks_total")
         self._m_readmissions = reg.counter("obs_readmissions_total")
+        self._m_alerts = reg.counter("obs_alerts_total")
         self._m_step_status: Dict[str, Any] = {}
         self._m_run_status: Dict[str, Any] = {}
         self._h_step_dur = reg.histogram("obs_step_duration_s")
@@ -367,8 +368,10 @@ class ObsCollector:
         t = b.tree
         if t.start == 0.0:
             t.start = ev.ts
-        if b.open_backoff is not None and ev.type is not \
-                EventType.WORKFLOW_REQUEUED:
+        if b.open_backoff is not None and ev.type not in (
+                EventType.WORKFLOW_REQUEUED, EventType.ALERT):
+            # ALERT is advisory (a readmission-storm alert lands right
+            # after WORKFLOW_REQUEUED) — it must not close the window
             # first event of the new epoch closes the backoff window
             b.open_backoff.end = ev.ts
             b.open_backoff = None
@@ -461,6 +464,11 @@ class ObsCollector:
                           cause="WORKFLOW_REQUEUED")
             t.segments.append(seg)
             b.open_backoff = seg
+        elif et is EventType.ALERT:
+            t.causes.append({"type": "ALERT", "detector": ev.status,
+                             "step": ev.step, "ts": ev.ts,
+                             "error": ev.error})
+            self._m_alerts.inc()
 
     def _close_open(self, b: _RunBuilder, ts: float, status: str,
                     cause: str) -> None:
